@@ -1,0 +1,86 @@
+"""Paper Fig. 2 adapted: sustained throughput vs execution-unit mix.
+
+TPUs do not throttle clocks by ISA width (the paper's Fig. 2 phenomenon is
+x86-specific — DESIGN.md §2), so the TPU-relevant question becomes: how
+much does co-issuing other unit classes degrade each unit's sustained
+rate? We measure the host's matmul-only / vector-only / transcendental-
+only rates and then the 1:1 mixes; the "sustained fraction" column is the
+analogue of the paper's sustained-frequency fraction (e.g. SPR AVX-512 at
+53% of turbo).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+N = 1 << 16
+MAT = 384
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _chain(op, k=64):
+    def f(*args):
+        def body(_, x):
+            return op(x, *args[1:])
+        return jax.lax.fori_loop(0, k, body, args[0])
+    return jax.jit(f), k
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    x = jnp.abs(jax.random.normal(key, (N,), jnp.float32)) + 0.5
+    m = jax.random.normal(key, (MAT, MAT), jnp.float32) * 0.02
+
+    mm, k1 = _chain(lambda a, w: a @ w, 16)
+    vec, k2 = _chain(lambda v, c: v * 0.999 + c, 64)
+    xlu, k3 = _chain(lambda v: jnp.exp(-v), 64)
+
+    def mixed_op(a, w, v):
+        return a @ w, v * 0.999 + 0.5
+
+    def mixed(k=16):
+        def f(a, w, v):
+            def body(_, c):
+                aa, vv = c
+                return (aa @ w, vv * 0.999 + 0.5)
+            return jax.lax.fori_loop(0, k, body, (a, v))
+        return jax.jit(f), k
+
+    mixfn, k4 = mixed()
+
+    t_mm = _time(mm, m, m) / k1
+    t_vec = _time(vec, x, x * 0.5) / k2
+    t_xlu = _time(xlu, x) / k3
+    t_mix = _time(mixfn, m, m, x) / k4
+
+    # sustained fraction: mixed time vs sum-of-parts ideal (perfect overlap
+    # = max(parts); no overlap = sum(parts))
+    ideal = max(t_mm, t_vec)
+    serial = t_mm + t_vec
+    frac = (serial - t_mix) / max(serial - ideal, 1e-12)  # 1 = full overlap
+    lines = [
+        f"fig2,matmul_only,{t_mm*1e6:.1f},gflops={2*MAT**3/t_mm/1e9:.1f}",
+        f"fig2,vector_only,{t_vec*1e6:.1f},gelem={N/t_vec/1e9:.2f}",
+        f"fig2,xlu_only,{t_xlu*1e6:.1f},gelem={N/t_xlu/1e9:.2f}",
+        f"fig2,mixed_mm_vec,{t_mix*1e6:.1f},overlap_frac={frac:.2f}",
+        "fig2,tpu_note,0,TPU clocks are fixed; paper Fig.2 freq-vs-ISA "
+        "has no TPU analogue (DESIGN.md)",
+    ]
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,78 @@
+"""Paper Fig. 3: RPE histograms — our port/ECM model vs the naive
+cost_analysis baseline (the LLVM-MCA stand-in) over the validation suite.
+
+Default (quick): 13 kernels x 2 variants x 2 sizes = 52 blocks.
+--full: 13 x 8 x 4 = 416 blocks (the paper's count). Results are cached
+to results/rpe_records.json so reruns are incremental.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import rpe
+
+CACHE = "results/rpe_records.json"
+
+
+def run(full: bool = False, cache: str = CACHE):
+    variants = rpe.VARIANTS if full else ("jnp", "fori")
+    sizes = tuple(rpe.SIZES) if full else ("S", "L")
+    done = {}
+    if os.path.exists(cache):
+        with open(cache) as f:
+            for d in json.load(f):
+                done[(d["kernel"], d["variant"], d["size"])] = d
+    records = []
+    changed = False
+    from repro.kernels.stream.ref import KERNELS_13
+    for k in KERNELS_13:
+        for v in variants:
+            for s in sizes:
+                kk = (k, v, s)
+                if kk in done:
+                    d = done[kk]
+                    records.append(rpe.RpeRecord(**d))
+                    continue
+                try:
+                    r = rpe.run_block(k, v, s)
+                except Exception:  # noqa: BLE001 — suite must finish
+                    r = rpe.RpeRecord(k, v, s, float("nan"),
+                                      float("nan"), float("nan"))
+                records.append(r)
+                done[kk] = r.__dict__
+                changed = True
+    if changed:
+        os.makedirs(os.path.dirname(cache), exist_ok=True)
+        with open(cache, "w") as f:
+            json.dump([d if isinstance(d, dict) else d for d in
+                       (x.__dict__ for x in records)], f, indent=1)
+    return records
+
+
+def main(quick: bool = True):
+    records = run(full=not quick)
+    s = rpe.summarize(records)
+    lines = []
+    for model in ("port_model", "naive_baseline"):
+        st = s[model]
+        lines.append(
+            f"fig3,{model},0,"
+            f"n={st['n']};right_of_zero={st['right_of_zero_pct']:.0f}%;"
+            f"within10={st['within10_pct']:.0f}%;"
+            f"within20={st['within20_pct']:.0f}%;"
+            f"factor2_off={st['factor2_off']};"
+            f"mean_underpred={st['mean_underpred_rpe']:.2f}")
+    h = rpe.histogram(records, "port")
+    lines.append("fig3,hist_port,0," +
+                 ";".join(f"{k}:{v}" for k, v in h.items()))
+    h2 = rpe.histogram(records, "naive")
+    lines.append("fig3,hist_naive,0," +
+                 ";".join(f"{k}:{v}" for k, v in h2.items()))
+    return lines
+
+
+if __name__ == "__main__":
+    import sys
+    print("\n".join(main(quick="--full" not in sys.argv)))

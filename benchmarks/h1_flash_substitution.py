@@ -1,0 +1,67 @@
+"""H1.it1 — flash-attention substitution, reproducibly derived from the
+H1 baseline record's per-loop byte attribution (EXPERIMENTS.md §Perf H1).
+
+The attention inner kv-scans are the whiles with trips in [2, S/kv_chunk]
+inside the layer loops; their bytes are replaced by the Pallas kernel's
+Q/K/V/O payload.
+
+  PYTHONPATH=src:. python -m benchmarks.h1_flash_substitution
+"""
+
+import json
+
+from repro.configs import get_config
+from repro.utils.hw import HBM_BW
+
+
+def main(path="results/perf/H1_base.json"):
+    rec = json.load(open(path))
+    cfg = get_config("yi-9b")
+    pm = rec["portmodel"]
+    accum = rec.get("accum_steps", 16)
+    s, kvc = 4096, cfg.kv_chunk
+    max_trips = max(2, s // kvc)
+
+    # 1) attention-scan bytes per layer-loop visit (loop_bytes holds the
+    # per-visit totals of each distinct loop body)
+    attn_per_visit = 0.0
+    layer_loops = []
+    for name, (n, b, f) in pm["loop_bytes"].items():
+        if 2 <= n <= max_trips and b > 8e6:
+            attn_per_visit += n * b
+        elif n == cfg.n_layers:
+            layer_loops.append((name, n, b))
+    # trip-1 chunks are unrolled (not whiles): scale by the q-chunk census —
+    # chunks with >=2 kv trips carry (nq - nq_trip1)/nq of the traffic
+    nq = s // cfg.q_chunk
+    trip1 = sum(1 for i in range(nq)
+                if (i * cfg.q_chunk + cfg.q_chunk + kvc - 1) // kvc == 1)
+    scale = nq / max(1, nq - trip1)
+    attn_per_visit *= scale
+
+    # 2) the attention whiles live inside the layer-loop bodies (fwd AND
+    # bwd bodies both contribute distinct while names to loop_bytes, so
+    # attn_per_visit already covers one visit of each). Each body runs
+    # n_layers times per microbatch, and there are accum microbatches.
+    total_attn = attn_per_visit * cfg.n_layers * accum
+
+    # 3) flash kernel replacement payload: Q,K,V,O per layer-pass, TP/16
+    b_loc = max(1, 256 // 16 // accum)
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_eff
+    qkvo = b_loc * s * (2 * h + 2 * hkv) * dh * 2 / 16
+    flash_total = qkvo * cfg.n_layers * accum * 4      # fwd+remat+bwd(2x)
+
+    before = pm["bytes_hbm"]
+    after = before - total_attn + flash_total
+    print(f"attention-scan bytes (attributed): {total_attn:.3e} "
+          f"({total_attn/before:.1%} of step)")
+    print(f"flash Q/K/V/O payload            : {flash_total:.3e}")
+    print(f"step bytes  : {before:.3e} -> {after:.3e}")
+    print(f"T_mem       : {before/HBM_BW:.2f} s -> {after/HBM_BW:.2f} s "
+          f"({(after-before)/before:+.1%})")
+    return {"before": before, "after": after,
+            "attn_bytes": total_attn, "flash_bytes": flash_total}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""§Roofline: build the three-term table for every dry-run record under
+results/dryrun (produced by repro.launch.dryrun --all --both-meshes)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.core import roofline
+
+
+def load_cells(pattern: str = "results/dryrun/*.json"):
+    cells = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            rec = json.load(f)
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        pm = rec.get("portmodel")
+        rep = None
+        if pm is not None:
+            from repro.core.portmodel import Report
+            rep = Report(
+                tp_cycles=pm["tp_cycles"], cp_cycles=pm["cp_cycles"],
+                serial_cycles=pm["serial_cycles"],
+                port_occupation=pm.get("top_ports", {}),
+                flops=pm["flops"], bytes_hbm=pm["bytes_hbm"],
+                coll_bytes=pm["coll_bytes"], n_instrs=pm["n_instrs"],
+                unknown_ops=pm["unknown_ops"], trips_seen=pm.get("trips", {}))
+        cells.append(roofline.analyze_cell(rec, cfg, shape, report=rep))
+    return cells
+
+
+def main(quick: bool = False):
+    cells = load_cells()
+    lines = []
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape, c.mesh)):
+        lines.append(
+            f"roofline,{c.arch}.{c.shape}.{c.mesh},{c.bound*1e6:.0f},"
+            f"Tc={c.t_compute*1e3:.2f}ms;Tc_port={c.t_compute_port*1e3:.2f}ms;"
+            f"Tm={c.t_memory*1e3:.2f}ms;Tx={c.t_collective*1e3:.2f}ms;"
+            f"dom={c.dominant};useful={c.useful_ratio:.2f};"
+            f"peak_frac={c.peak_fraction:.3f};wa={c.wa_ratio:.2f}")
+    if not lines:
+        lines = ["roofline,no_records,0,run repro.launch.dryrun first"]
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. ``--only <tag>`` runs one;
+``--full`` runs the complete (slow) variants, e.g. the 416-block Fig. 3
+suite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ("table1_machines", "table2_ports", "table3_instructions",
+           "fig2_unitmix", "fig3_rpe", "fig4_wa", "roofline_sweep")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            quick = not args.full
+            lines = mod.main(quick=quick)
+            for ln in lines:
+                print(ln)
+            print(f"_meta,{mod_name},{(time.time()-t0)*1e6:.0f},ok",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"_meta,{mod_name},{(time.time()-t0)*1e6:.0f},FAILED",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

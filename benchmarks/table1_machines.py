@@ -1,0 +1,50 @@
+"""Paper Table I analog: core-feature comparison of the three target TPU
+generations + the measured host envelope (theoretical vs achieved peak)."""
+
+from __future__ import annotations
+
+from repro.core.ubench import calibrated_host_model, host_peaks, mem_tiers
+from repro.utils.hw import CHIPS
+
+
+def rows():
+    out = []
+    for name in ("tpu_v5e", "tpu_v4", "tpu_v5p"):
+        c = CHIPS[name]
+        out.append({
+            "machine": name,
+            "bf16_tflops": c.bf16_flops / 1e12,
+            "hbm_gb": c.hbm_bytes / 1e9,
+            "hbm_gbs": c.hbm_bw / 1e9,
+            "ici_gbs_per_link": c.ici_link_bw / 1e9,
+            "vmem_mb": c.vmem_bytes / 2**20,
+            "clock_ghz": c.clock_hz / 1e9,
+            "mxu": c.n_mxu, "vpu": c.n_vpu,
+        })
+    calibrated_host_model()
+    peak, bw = host_peaks()
+    out.append({
+        "machine": "host_cpu(measured)",
+        "bf16_tflops": peak / 1e12,       # f32 matmul achieved
+        "hbm_gb": 0, "hbm_gbs": bw / 1e9,
+        "ici_gbs_per_link": 0, "vmem_mb": 0, "clock_ghz": 1.0,
+        "mxu": 1, "vpu": 1,
+    })
+    return out
+
+
+def main(quick: bool = False):
+    lines = []
+    for r in rows():
+        lines.append(
+            f"table1,{r['machine']},0,"
+            f"tflops={r['bf16_tflops']:.1f};bw={r['hbm_gbs']:.0f}GB/s;"
+            f"ici={r['ici_gbs_per_link']:.0f}GB/s;clock={r['clock_ghz']:.2f}GHz")
+    tiers = ";".join(f"{int(c) if c != float('inf') else 'inf'}:"
+                     f"{b/1e9:.1f}GB/s" for c, b in mem_tiers())
+    lines.append(f"table1,host_mem_tiers,0,{tiers}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

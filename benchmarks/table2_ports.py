@@ -1,0 +1,26 @@
+"""Paper Table II analog: in-core features / port models of the machines."""
+
+from __future__ import annotations
+
+from repro.core.machine import MACHINES
+from repro.core.ubench import calibrated_host_model
+
+
+def main(quick: bool = False):
+    lines = []
+    machines = dict(MACHINES)
+    machines["host_cpu"] = calibrated_host_model()
+    for name, m in machines.items():
+        n_mxu = sum(1 for p in m.ports if p.startswith("MXU"))
+        n_vpu = sum(1 for p in m.ports if p.startswith("VPU"))
+        lines.append(
+            f"table2,{name},0,"
+            f"ports={len(m.ports)};mxu={n_mxu};vpu={n_vpu};"
+            f"simd_bytes={m.simd_width_bytes};"
+            f"mxu_cyc_per_pass={m.table['mxu'].cycles_per_unit:.0f};"
+            f"vpu_lat={m.table['vpu'].latency:.0f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

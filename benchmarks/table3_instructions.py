@@ -1,0 +1,46 @@
+"""Paper Table III analog: per-op-class throughput and latency.
+
+For the TPU machines the entries are the machine-model values in
+DP-elements/cycle (the paper's unit); for the host they are ubench-
+measured. The paper's observation structure carries over: the widest
+machine (v5p) wins vector throughput, latency is flat across generations
+(fixed-function units), gather is cache-line/tile limited.
+"""
+
+from __future__ import annotations
+
+from repro.core.machine import MACHINES
+from repro.core.ubench import calibrated_host_model, measure_host_rates
+
+VPU_BLOCK = 8 * 128
+CLASSES = ("vpu", "xlu", "vdiv", "vlsu", "gather4", "mxu")
+
+
+def main(quick: bool = False):
+    lines = []
+    for name, m in MACHINES.items():
+        n_vpu = sum(1 for p in m.ports if p.startswith("VPU"))
+        n_mxu = sum(1 for p in m.ports if p.startswith("MXU"))
+        for cls in CLASSES:
+            e = m.table[cls]
+            if cls == "mxu":
+                # elements/cy for a dense 128x128x128 pass
+                per_cy = 128 * 128 * n_mxu / e.cycles_per_unit
+            else:
+                ports = n_vpu if cls in ("vpu", "xlu", "vdiv") else 2
+                per_cy = VPU_BLOCK * ports / e.cycles_per_unit / 2  # DP=2xf32
+            lines.append(f"table3,{name}.{cls},0,"
+                         f"dp_elems_per_cy={per_cy:.1f};lat_cy={e.latency:.0f}")
+    rates = measure_host_rates()
+    raw = rates.pop("_raw")
+    for cls in CLASSES:
+        if cls in rates:
+            lines.append(f"table3,host_cpu.{cls},0,"
+                         f"units_per_s={rates[cls]:.3e}")
+    lines.append(f"table3,host_cpu.matmul,{raw['matmul_s']*1e6:.1f},"
+                 f"gflops={raw['flops_matmul']/1e9:.1f}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

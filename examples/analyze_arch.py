@@ -1,0 +1,59 @@
+"""Analyze one (architecture x shape) cell like the dry-run does, on a
+reduced config and tiny mesh so it runs anywhere: lower + compile a train
+step, run the port model + WA analyzer on the compiled HLO, print the
+three roofline terms for TPU v5e.
+
+Run:  PYTHONPATH=src python examples/analyze_arch.py --arch jamba-v0.1-52b
+"""
+
+import argparse
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.core import portmodel, wa
+from repro.core.machine import MACHINES
+from repro.optim.adamw import OptConfig
+from repro.train import step as step_lib
+from repro.utils.hw import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="jamba-v0.1-52b",
+                    choices=list(ARCH_IDS))
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    shape = ShapeSpec("example", args.seq, args.batch, "train")
+    fn = step_lib.make_train_step(cfg, OptConfig(), 1)
+    state = step_lib.train_state_shapes(cfg)
+    batch = step_lib.batch_shapes(cfg, shape)
+    compiled = jax.jit(fn).lower(state, batch).compile()
+    hlo = compiled.as_text()
+
+    v5e = MACHINES["tpu_v5e"]
+    rep = portmodel.analyze(hlo, v5e)
+    war = wa.analyze_text_stores(hlo)
+    t_c = rep.flops / PEAK_FLOPS
+    t_m = rep.bytes_hbm * war["wa_ratio"] / HBM_BW
+    t_x = sum(rep.coll_bytes.values()) / (ICI_BW * 4)
+    print(f"arch={args.arch} (smoke) shape={shape.seq_len}x{shape.global_batch}")
+    print(f"  flops/step      : {rep.flops:.3e}")
+    print(f"  hbm bytes/step  : {rep.bytes_hbm:.3e}  (wa_ratio "
+          f"{war['wa_ratio']:.2f})")
+    print(f"  T_compute       : {t_c*1e6:10.1f} us")
+    print(f"  T_compute(port) : {rep.seconds_incore(v5e)*1e6:10.1f} us")
+    print(f"  T_memory        : {t_m*1e6:10.1f} us")
+    print(f"  T_collective    : {t_x*1e6:10.1f} us")
+    print(f"  bottleneck      : {rep.bottleneck()}  "
+          f"(serial/LCD cycles {rep.serial_cycles:.2e})")
+    print(f"  loop trips seen : {dict(list(rep.trips_seen.items())[:6])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Quickstart: the paper's workflow end-to-end on one kernel.
+
+1. Write a JAX kernel (STREAM triad).
+2. Compile it and let the port model (OSACA-semantics TP/CP/LCD over the
+   compiled HLO) produce a lower-bound runtime for the TPU v5e machine
+   model AND the ubench-calibrated host model.
+3. Measure on the host and compare both our model and the naive
+   cost_analysis baseline (the LLVM-MCA stand-in) — paper Fig. 3 in
+   miniature.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baseline, portmodel
+from repro.core.machine import MACHINES
+from repro.core.ubench import calibrated_host_model, host_peaks, tier_bw
+
+N = 1 << 22
+
+
+def triad(b, c):
+    return b + 2.5 * c
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    b = jax.random.normal(key, (N,), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(1), (N,), jnp.float32)
+
+    fn = jax.jit(triad)
+    compiled = fn.lower(b, c).compile()
+    hlo = compiled.as_text()
+
+    # --- target machine: TPU v5e (spec-derived model) ---
+    v5e = MACHINES["tpu_v5e"]
+    rep = portmodel.analyze(hlo, v5e)
+    print("== TPU v5e (target) ==")
+    print(f"  flops={rep.flops:.3e}  hbm_bytes={rep.bytes_hbm:.3e}")
+    print(f"  in-core bound: {rep.bound_incore_cycles/v5e.clock_hz*1e6:.2f} us"
+          f"   full bound: {rep.seconds(v5e)*1e6:.2f} us"
+          f"   bottleneck: {rep.bottleneck()}")
+
+    # --- host: calibrate, predict, measure ---
+    host = calibrated_host_model()
+    rep_h = portmodel.analyze(hlo, host)
+    ws = 2 * 4 * N
+    t_pred = max(rep_h.seconds_incore(host), rep_h.bytes_hbm / tier_bw(ws))
+    peak, bw = host_peaks()
+    t_naive = baseline.predict(compiled.cost_analysis() or {},
+                               host, peak, bw).seconds
+
+    out = fn(b, c)
+    jax.block_until_ready(out)
+    best = min(_timed(fn, b, c) for _ in range(5))
+    print("== host (measured vs predicted) ==")
+    print(f"  measured     : {best*1e6:9.1f} us")
+    print(f"  port model   : {t_pred*1e6:9.1f} us  "
+          f"(rpe {(best-t_pred)/best:+.2f}; >=0 means lower bound held)")
+    print(f"  naive (MCA~) : {t_naive*1e6:9.1f} us  "
+          f"(rpe {(best-t_naive)/best:+.2f})")
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    main()

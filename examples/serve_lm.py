@@ -1,0 +1,18 @@
+"""Batched serving example: prefill + decode with a donated KV cache
+(the framework's NT-store analogue) on a reduced gemma3 config (local+
+global attention mix exercises both cache kinds).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "gemma3-4b", "--smoke",
+                "--batch", "4", "--prompt-len", "64", "--gen", "32",
+                "--temperature", "0.8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Sharded, async checkpointing with atomic commit + restart discovery.
+
+Layout:  <dir>/step_<N>/
+           manifest.json       — tree structure, shapes, dtypes, step
+           leaf_<i>.npy        — one file per pytree leaf
+           COMMIT              — written last; restore ignores dirs without it
+
+Saves run on a background thread (double-buffered: at most one in flight,
+a new save waits for the previous). Restore rebuilds arrays against the
+live mesh sharding when one is provided, so a checkpoint written on one
+mesh can restart on another (elastic re-shard path used by
+repro.launch.faults).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+# np.save stores ml_dtypes (bfloat16, fp8) as raw void; round-trip through
+# a byte view with the true dtype recorded in the manifest.
+_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+         "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _VIEW:
+        return arr.view(_VIEW[name]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, name: str):
+    if name in _VIEW:
+        return arr.view(getattr(ml_dtypes, name))
+    return arr
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree, *, block: bool = False):
+        self.wait()
+        leaves, treedef = _flatten_with_paths(tree)
+        host_leaves = [np.asarray(l) for l in leaves]   # device->host copy
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_leaves, str(treedef)),
+            daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def _write(self, step: int, leaves, treedef_str: str):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        dtypes = []
+        for i, l in enumerate(leaves):
+            enc, name = _encode(l)
+            dtypes.append(name)
+            np.save(os.path.join(tmp, f"leaf_{i}.npy"), enc)
+        manifest = {"step": step, "n_leaves": len(leaves),
+                    "dtypes": dtypes, "treedef": treedef_str}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "COMMIT"), "w") as f:
+            f.write("ok")
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self) -> list:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            p = os.path.join(self.dir, name)
+            if name.startswith("step_") and \
+                    os.path.exists(os.path.join(p, "COMMIT")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like_tree, mesh=None, spec_tree=None):
+        """Restore into the structure of `like_tree`; if mesh+specs given,
+        leaves are placed with those shardings (elastic re-shard)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        leaves, treedef = jax.tree.flatten(like_tree)
+        n = len(leaves)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        dtypes = manifest.get("dtypes", [None] * n)
+        loaded = [_decode(np.load(os.path.join(d, f"leaf_{i}.npy")),
+                          dtypes[i]) for i in range(n)]
+        if mesh is not None and spec_tree is not None:
+            specs = jax.tree.leaves(
+                spec_tree, is_leaf=lambda x: hasattr(x, "index") or x is None)
+            from jax.sharding import NamedSharding
+            placed = []
+            for arr, spec in zip(loaded, specs):
+                sh = NamedSharding(mesh, spec)
+                placed.append(jax.make_array_from_callback(
+                    arr.shape, sh, lambda idx, a=arr: a[idx]))
+            loaded = placed
+        else:
+            loaded = [jnp.asarray(a) for a in loaded]
+        return jax.tree.unflatten(treedef, loaded)
+
+    def restore_latest(self, like_tree, mesh=None, spec_tree=None):
+        s = self.latest_step()
+        if s is None:
+            return None, None
+        return s, self.restore(s, like_tree, mesh, spec_tree)

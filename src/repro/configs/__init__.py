@@ -1,0 +1,35 @@
+"""Architecture registry: ``get_config("<arch-id>")`` returns the exact
+published configuration; ``get_smoke_config`` the reduced same-family one."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, ShapeSpec, SHAPES, shapes_for,
+                                smoke_config)
+
+ARCH_MODULES = {
+    "yi-9b": "yi_9b",
+    "gemma3-4b": "gemma3_4b",
+    "minitron-8b": "minitron_8b",
+    "qwen1.5-110b": "qwen15_110b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "grok-1-314b": "grok1_314b",
+    "musicgen-large": "musicgen_large",
+    "xlstm-125m": "xlstm_125m",
+    "jamba-v0.1-52b": "jamba_52b",
+}
+
+ARCH_IDS = tuple(ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return smoke_config(get_config(arch_id))

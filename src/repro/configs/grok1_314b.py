@@ -1,0 +1,10 @@
+"""Grok-1 314B — MoE 8 experts top-2 [hf:xai-org/grok-1; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=0, vocab_size=131072,
+    block_pattern=("attn:moe",),
+    n_experts=8, experts_per_token=2, d_ff_expert=32768,
+)

@@ -1,0 +1,56 @@
+"""The comparison model — our LLVM-MCA stand-in (DESIGN.md §2).
+
+LLVM-MCA predicts from a generic scheduling model without measured port
+data; the XLA analogue is ``compiled.cost_analysis()``: raw FLOPs and
+bytes pushed through peak-rate ceilings, with no port structure, no
+latency chains, and no loop-trip awareness. We expose it with the same
+Report-like interface so the RPE harness (paper Fig. 3) can score both
+models on identical inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.machine import MachineModel
+from repro.utils.hw import ChipSpec
+
+
+@dataclasses.dataclass
+class BaselineReport:
+    flops: float
+    bytes_hbm: float
+    transcendentals: float
+    t_compute: float
+    t_memory: float
+
+    @property
+    def seconds(self) -> float:
+        return max(self.t_compute, self.t_memory)
+
+    def bottleneck(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
+
+
+def predict(cost_analysis: dict, machine: MachineModel,
+            peak_flops: float | None = None,
+            mem_bw: float | None = None) -> BaselineReport:
+    """Naive roofline from XLA cost analysis (per-device numbers)."""
+    chip = machine.chip
+    if peak_flops is None:
+        peak_flops = chip.bf16_flops if chip else 1e11
+    if mem_bw is None:
+        mem_bw = chip.hbm_bw if chip else 2e10
+    flops = float(cost_analysis.get("flops", 0.0) or 0.0)
+    byts = float(cost_analysis.get("bytes accessed", 0.0) or 0.0)
+    trans = float(cost_analysis.get("transcendentals", 0.0) or 0.0)
+    return BaselineReport(
+        flops=flops, bytes_hbm=byts, transcendentals=trans,
+        t_compute=flops / peak_flops, t_memory=byts / mem_bw)
+
+
+def predict_from_counts(flops: float, byts: float, machine: MachineModel,
+                        peak_flops: float | None = None,
+                        mem_bw: float | None = None) -> BaselineReport:
+    return predict({"flops": flops, "bytes accessed": byts}, machine,
+                   peak_flops, mem_bw)

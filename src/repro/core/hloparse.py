@@ -1,0 +1,204 @@
+"""Parser for post-optimization HLO text (``compiled.as_text()``).
+
+Regex-grammar based (DESIGN.md §7): resilient to XLA version drift —
+unknown constructs degrade to generic instructions, never crash. Extracts
+exactly what the in-core model needs:
+
+ * computations (fusion bodies, while bodies/conditions, ENTRY)
+ * per-instruction: opcode, result shape(s), operand names, attributes
+ * dot dimension numbers, slice/dus info, collective metadata
+ * while-loop trip counts (recovered from the condition's constants —
+   XLA's HloCostAnalysis visits loop bodies ONCE, which under-counts a
+   scanned 80-layer model by 80x; we re-multiply)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+from repro.utils.hw import dtype_bytes
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[\d,]*\](?:\{[^}]*\})?|[a-z][a-z0-9]*\[\])\s*"
+    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_ATTR_CALL = re.compile(r"(calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: tuple
+
+    @property
+    def elems(self) -> int:
+        return int(math.prod(self.dims)) if self.dims else 1
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * dtype_bytes(self.dtype)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    shapes: list          # list[Shape] (tuple results flattened)
+    operands: list        # operand instruction names
+    attrs: str            # raw attribute text
+    is_root: bool = False
+
+    @property
+    def shape(self) -> Shape:
+        return self.shapes[0]
+
+    def attr_comp(self, key: str) -> str | None:
+        for k, v in _ATTR_CALL.findall(self.attrs):
+            if k == key:
+                return v
+        return None
+
+    def attr_dims(self, key: str) -> tuple:
+        m = re.search(key + r"=\{([\d,]*)\}", self.attrs)
+        if not m or not m.group(1):
+            return ()
+        return tuple(int(x) for x in m.group(1).split(","))
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    is_entry: bool = False
+
+    @property
+    def root(self) -> Instr:
+        for i in self.instrs:
+            if i.is_root:
+                return i
+        return self.instrs[-1]
+
+    def by_name(self) -> dict:
+        return {i.name: i for i in self.instrs}
+
+
+@dataclasses.dataclass
+class HloModule:
+    name: str
+    computations: dict    # name -> Computation
+    entry: Computation
+
+
+def parse_shapes(text: str) -> list:
+    """Parse a result type: single shape, scalar, or tuple."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = tuple(int(x) for x in m.group(2).split(",")) \
+            if m.group(2) else ()
+        out.append(Shape(m.group(1), dims))
+    if not out:
+        out.append(Shape("f32", ()))
+    return out
+
+
+def _split_operands_attrs(rest: str) -> tuple:
+    """rest starts after 'opcode(' — split balanced operand list / attrs."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def parse_hlo(text: str) -> HloModule:
+    mod_name = "unknown"
+    m = re.match(r"HloModule\s+([\w\.\-]+)", text)
+    if m:
+        mod_name = m.group(1)
+    comps: dict = {}
+    entry_name = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            h = _COMP_HDR.match(line.strip())
+            if h and line.rstrip().endswith("{"):
+                cur = Computation(h.group(2), [], is_entry=bool(h.group(1)))
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry_name = cur.name
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        root, name, typ, opcode, rest = im.groups()
+        ops_text, attrs = _split_operands_attrs(rest)
+        attrs = attrs.strip()
+        if opcode in ("parameter", "constant", "iota"):
+            operands = []
+            if opcode == "parameter" and ops_text.strip().isdigit():
+                attrs = f"parameter_index={ops_text.strip()} " + attrs
+        else:
+            operands = _OPERAND_RE.findall(ops_text)
+        cur.instrs.append(Instr(
+            name=name, opcode=opcode, shapes=parse_shapes(typ),
+            operands=operands, attrs=attrs, is_root=bool(root)))
+    if entry_name is None:
+        # fall back: biggest computation
+        entry_name = max(comps, key=lambda c: len(comps[c].instrs))
+    return HloModule(mod_name, comps, comps[entry_name])
+
+
+_TRIP_RE = re.compile(r'known_trip_count\\?"\s*:\s*\{\\?"n\\?":\\?"(\d+)')
+
+
+def while_trip_count(mod: HloModule, wh: Instr, trips: dict) -> int:
+    """Trip count of a while instruction.
+
+    Primary source: XLA's own ``backend_config known_trip_count``
+    annotation on the instruction. Fallback: largest small integer in the
+    condition computation (heuristic, capped — vocab-sized constants in
+    gather/sort conditions must not masquerade as trip counts)."""
+    m = _TRIP_RE.search(wh.attrs)
+    if m:
+        return int(m.group(1))
+    cond_name = wh.attr_comp("condition")
+    if cond_name and cond_name in trips:
+        t = trips[cond_name]
+        if t <= 8192:           # cap the heuristic (layer/chunk scans)
+            return t
+    return 1
+
+
+def trip_counts_from_text(text: str) -> dict:
+    """Map condition-computation name -> trip count, straight from text."""
+    trips: dict = {}
+    cur = None
+    for line in text.splitlines():
+        h = _COMP_HDR.match(line.strip())
+        if h and line.rstrip().endswith("{"):
+            cur = h.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        m = _CONST_INT.search(line)
+        if m:
+            v = int(m.group(1))
+            if 1 < v <= 10_000_000:
+                trips[cur] = max(trips.get(cur, 1), v)
+    return trips

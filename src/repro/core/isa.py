@@ -1,0 +1,198 @@
+"""HLO opcode -> TPU µ-op decomposition (the paper's instruction tables).
+
+Each HLO instruction becomes a list of (µ-op class, units) pairs against
+the machine model's port table, plus flop/byte side accounting. Unknown
+opcodes degrade to VPU-class elementwise with a warning counter — never a
+crash (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+from repro.core.hloparse import Instr, Shape
+
+VPU_BLOCK = 8 * 128      # elements per (8,128) vector register block
+
+XLU_OPS = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "logistic", "tanh", "tan", "sine", "cosine", "rsqrt", "sqrt", "cbrt",
+    "power", "atan2", "erf", "rng", "rng-bit-generator", "rng-get-and-update-state",
+}
+DIV_OPS = {"divide", "remainder"}
+CHEAP_EW = {
+    "add", "subtract", "multiply", "maximum", "minimum", "abs", "negate",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "convert",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "popcnt", "clz", "is-finite", "stochastic-convert", "real", "imag",
+    "atan", "expm1", "log1p",
+}
+DATA_MOVE = {
+    "copy", "broadcast", "reshape", "transpose", "concatenate", "slice",
+    "dynamic-slice", "dynamic-update-slice", "pad", "reverse", "gather",
+    "scatter", "iota", "copy-start", "copy-done", "reduce-window",
+    "select-and-scatter", "sort", "map", "set-dimension-size",
+}
+FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "domain", "opt-barrier",
+    "get-dimension-size", "partition-id", "replica-id", "token",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "all-reduce-done", "all-gather-done",
+    "collective-permute-done",
+}
+
+
+@dataclasses.dataclass
+class Uops:
+    """Decomposition result + side accounting for one instruction."""
+    uops: list            # [(class, units)]
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    coll_bytes: float = 0.0
+    coll_kind: str = ""
+    unknown: bool = False
+
+
+def _dot_mnkb(instr: Instr, shapes_of: dict) -> tuple:
+    """(B, M, N, K) for a dot from operand shapes + dim numbers."""
+    lhs = shapes_of.get(instr.operands[0]) if instr.operands else None
+    rhs = shapes_of.get(instr.operands[1]) if len(instr.operands) > 1 else None
+    if lhs is None or rhs is None:
+        # fall back: assume square-ish from output
+        e = instr.shape.elems
+        s = max(1.0, e ** 0.5)
+        return 1, s, s, s
+    lc = set(instr.attr_dims("lhs_contracting_dims"))
+    rc = set(instr.attr_dims("rhs_contracting_dims"))
+    lb = set(instr.attr_dims("lhs_batch_dims"))
+    rb = set(instr.attr_dims("rhs_batch_dims"))
+    if not lc:
+        lc = {len(lhs.dims) - 1} if lhs.dims else set()
+    if not rc:
+        rc = {0} if rhs.dims else set()
+    bsz = math.prod(lhs.dims[i] for i in lb) if lb else 1
+    k = math.prod(lhs.dims[i] for i in lc) if lc else 1
+    m = math.prod(d for i, d in enumerate(lhs.dims) if i not in lc | lb)
+    n = math.prod(d for i, d in enumerate(rhs.dims) if i not in rc | rb)
+    return bsz, max(1, m), max(1, n), max(1, k)
+
+
+def _group_size(instr: Instr, n_devices: int) -> int:
+    """Participants per replica group of a collective."""
+    a = instr.attrs
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", a)
+    if m:                      # iota format [G,S]<=[N]...: S per group
+        return max(1, int(m.group(2)))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", a)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return n_devices
+
+
+def _vpu_blocks(elems: int) -> float:
+    return max(1.0, math.ceil(elems / VPU_BLOCK))
+
+
+def operand_bytes(instr: Instr, shapes_of: dict) -> float:
+    tot = 0.0
+    for op in instr.operands:
+        s = shapes_of.get(op)
+        if s is not None:
+            tot += s.bytes
+    return tot
+
+
+def decompose(instr: Instr, shapes_of: dict, n_devices: int = 1) -> Uops:
+    """µ-ops for one (non-fusion, non-control-flow) instruction."""
+    op = instr.opcode
+    out = instr.shape
+    e = sum(s.elems for s in instr.shapes)
+
+    if op in FREE_OPS:
+        return Uops([("sc", 1)])
+
+    if op == "dot":
+        bsz, m, n, k = _dot_mnkb(instr, shapes_of)
+        passes = bsz * math.ceil(m / 128) * math.ceil(n / 128) * \
+            math.ceil(k / 128)
+        return Uops([("mxu", passes)], flops=2.0 * bsz * m * n * k)
+
+    if op == "convolution":
+        # flops from out elems x kernel size (approx); map to MXU passes
+        kb = shapes_of.get(instr.operands[1]) if len(instr.operands) > 1 else None
+        ksize = kb.elems if kb is not None else 9
+        flops = 2.0 * e * ksize
+        passes = max(1.0, flops / (2 * 128 ** 3))
+        return Uops([("mxu", passes)], flops=flops)
+
+    if op in ("reduce", "reduce-precision"):
+        src = shapes_of.get(instr.operands[0]) if instr.operands else None
+        n_in = src.elems if src is not None else e
+        return Uops([("vpu", 2 * _vpu_blocks(n_in))], flops=float(n_in))
+
+    if op in COLLECTIVES:
+        base = op.replace("-start", "").replace("-done", "")
+        if op.endswith("-done"):
+            return Uops([("sc", 1)])
+        g = _group_size(instr, n_devices)
+        payload = sum(s.bytes for s in instr.shapes)
+        if base == "all-reduce":
+            wire = 2.0 * (g - 1) / g * payload
+        elif base in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = (g - 1) / g * payload
+        else:                  # collective-permute
+            wire = float(payload)
+        u = [("ici", wire)]
+        if base in ("all-reduce", "reduce-scatter"):
+            u.append(("vpu", _vpu_blocks(e)))
+        return Uops(u, coll_bytes=wire, coll_kind=base)
+
+    if op in XLU_OPS:
+        return Uops([("xlu", _vpu_blocks(e))], flops=float(e))
+
+    if op in DIV_OPS:
+        return Uops([("vdiv", _vpu_blocks(e))], flops=float(e))
+
+    if op in CHEAP_EW:
+        return Uops([("vpu", _vpu_blocks(e))], flops=float(e))
+
+    if op in ("gather", "scatter"):
+        if op == "scatter" and len(instr.operands) > 2:
+            upd = shapes_of.get(instr.operands[2])
+            if upd is not None:
+                e = upd.elems
+        return Uops([("gather4", _vpu_blocks(e))])
+
+    if op == "dynamic-update-slice":
+        # work scales with the UPDATE region, not the full buffer
+        upd = shapes_of.get(instr.operands[1]) \
+            if len(instr.operands) > 1 else None
+        ue = upd.elems if upd is not None else e
+        return Uops([("vlsu", _vpu_blocks(ue))])
+
+    if op in DATA_MOVE:
+        return Uops([("vlsu", _vpu_blocks(e))])
+
+    if op == "custom-call":
+        tgt = ""
+        m = re.search(r'custom_call_target="([^"]+)"', instr.attrs)
+        if m:
+            tgt = m.group(1).lower()
+        if "matmul" in tgt or "dot" in tgt or "gemm" in tgt:
+            bsz, mm, nn, kk = _dot_mnkb(instr, shapes_of)
+            passes = bsz * math.ceil(mm / 128) * math.ceil(nn / 128) * \
+                math.ceil(kk / 128)
+            return Uops([("mxu", passes)], flops=2.0 * bsz * mm * nn * kk)
+        if "topk" in tgt or "sort" in tgt:
+            return Uops([("vlsu", 4 * _vpu_blocks(e))])
+        return Uops([("vpu", _vpu_blocks(e))], unknown=True)
+
+    # unknown opcode: degrade to elementwise
+    return Uops([("vpu", _vpu_blocks(e))], flops=float(e), unknown=True)

@@ -1,0 +1,119 @@
+"""In-core machine models — the TPU analogue of the paper's Table II.
+
+A :class:`MachineModel` is the OSACA "machine file": a set of ports
+(functional-unit groups visible to the scheduler) plus, per µ-op class,
+which ports may execute it, how many cycles one *unit* of work occupies a
+port, and the result latency (for CP/LCD analysis).
+
+µ-op classes (units in parentheses):
+  mxu      — one 128x128x128 systolic pass (unit = pass, 128 cy/port)
+  vpu      — elementwise vector op (unit = one (8,128) register block)
+  xlu      — transcendental (exp/log/tanh/...) — multi-cycle VPU-class
+  vdiv     — vector divide/sqrt (slowest VPU-class, mirrors paper Table III)
+  vlsu     — VMEM load/store/shuffle (unit = (8,128) block moved)
+  sc       — scalar core op (loop bookkeeping, unit = 1 op)
+  dma      — HBM<->VMEM transfer (unit = byte)
+  ici      — inter-chip transfer (unit = byte)
+
+Three shipped TPU generations mirror the paper's three CPUs; `host_cpu`
+is calibrated at runtime by repro.core.ubench (the paper's
+microbenchmark-driven entries).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.utils.hw import CHIPS, ChipSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class OpEntry:
+    ports: tuple          # which ports can execute this µ-op class
+    cycles_per_unit: float
+    latency: float        # cycles until result usable
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    name: str
+    clock_hz: float
+    ports: tuple
+    table: dict           # class name -> OpEntry
+    chip: ChipSpec | None = None
+    # paper-style metadata (Table II row)
+    simd_width_bytes: int = 0
+    notes: str = ""
+
+    def entry(self, cls: str) -> OpEntry:
+        return self.table[cls]
+
+    def seconds(self, cycles: float) -> float:
+        return cycles / self.clock_hz
+
+
+def _tpu_model(chip: ChipSpec, mxu_lat: float = 192.0) -> MachineModel:
+    mxus = tuple(f"MXU{i}" for i in range(chip.n_mxu))
+    vpus = tuple(f"VPU{i}" for i in range(chip.n_vpu))
+    vlsus = ("VLSU0", "VLSU1")
+    dmas = ("DMA0", "DMA1")
+    icis = ("ICI",)
+    sc = ("SC",)
+    bytes_per_cy = chip.hbm_bw / chip.clock_hz          # both DMA queues
+    ici_bytes_per_cy = chip.ici_link_bw * chip.ici_links / chip.clock_hz
+    table = {
+        # one pass = stream 128 rows through the 128x128 array
+        "mxu": OpEntry(mxus, 128.0, mxu_lat),
+        "vpu": OpEntry(vpus, 1.0, 4.0),      # one (8,128) block per cy/port
+        "xlu": OpEntry(vpus, 4.0, 12.0),     # transcendental ~1/4 rate
+        "vdiv": OpEntry(vpus, 8.0, 24.0),
+        "vlsu": OpEntry(vlsus, 1.0, 6.0),    # (8,128) block load/store
+        "gather4": OpEntry(vlsus, 4.0, 12.0),  # random-index gather
+        "sc": OpEntry(sc, 1.0, 1.0),
+        "dma": OpEntry(dmas, 2.0 / bytes_per_cy, 500.0),   # per byte, split 2q
+        "ici": OpEntry(icis, 1.0 / ici_bytes_per_cy, 2000.0),
+    }
+    return MachineModel(
+        name=chip.name, clock_hz=chip.clock_hz,
+        ports=mxus + vpus + vlsus + dmas + icis + sc, table=table, chip=chip,
+        simd_width_bytes=8 * 128 * 4,
+        notes=f"{chip.n_mxu} MXU / {chip.n_vpu} VPU lanesets, "
+              f"{chip.hbm_bw/1e9:.0f} GB/s HBM")
+
+
+TPU_V5E = _tpu_model(CHIPS["tpu_v5e"])
+TPU_V5P = _tpu_model(CHIPS["tpu_v5p"])
+TPU_V4 = _tpu_model(CHIPS["tpu_v4"])
+
+MACHINES = {m.name: m for m in (TPU_V5E, TPU_V5P, TPU_V4)}
+
+
+def host_cpu_model(calib: dict | None = None) -> MachineModel:
+    """Host-CPU machine model; entries overridden by ubench calibration.
+
+    Units are normalized to a nominal 1 GHz clock so `cycles` == ns; the
+    calibration dict maps class -> units/second measured on this host.
+    """
+    clock = 1e9
+    default_rates = {           # units/s, conservative one-core defaults
+        "mxu": 2.0e7,           # ~84 GFLOP/s f32 matmul
+        "vpu": 1.2e9,           # (8,128)-blocks/s ~ 1.2e12 elem-ops/s? no:
+                                # 1024 elems/block -> ~1.2e12 elem/s is too
+                                # high for 1 core; calibration will fix.
+        "xlu": 1.5e8,
+        "vdiv": 2.0e8,
+        "vlsu": 1.0e9,
+        "gather4": 2.5e8,
+        "sc": 1.0e9,
+        "dma": 2.0e10,          # bytes/s main-memory stream
+        "ici": 1.0e10,
+    }
+    if calib:
+        default_rates.update(calib)
+    ports = ("P0", "MEM")       # one compute pipe + one memory pipe
+    table = {cls: OpEntry(("MEM",) if cls in ("dma", "ici") else ("P0",),
+                          clock / rate, 4.0)
+             for cls, rate in default_rates.items()}
+    return MachineModel(name="host_cpu", clock_hz=clock, ports=ports,
+                        table=table, notes="ubench-calibrated host model")

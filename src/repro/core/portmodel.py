@@ -1,0 +1,383 @@
+"""OSACA-semantics in-core analysis of compiled HLO: throughput (TP),
+critical path (CP), and loop-carried dependencies (LCD).
+
+Reproduces the paper's three analyses on the TPU port model:
+
+ * TP  — every µ-op's port occupation is distributed evenly over its
+         admissible ports; the block lower bound is the maximum per-port
+         sum (perfect ILP assumption -> optimistic/lower bound).
+ * CP  — longest latency path through the dataflow DAG.
+ * LCD — for `while` loops (layer scans, decode loops, optimizer loops),
+         the body's carried-dependency path sets the per-iteration floor:
+         cycles(loop) = trips * max(TP_body, LCD_body).
+
+The analyzer also re-accumulates FLOPs / HBM bytes / collective bytes with
+loop-trip multipliers — XLA's own cost_analysis visits while bodies once,
+which under-counts a scanned N-layer model by N x (see DESIGN.md §3.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+from repro.core import isa
+from repro.core.hloparse import (Computation, HloModule, Instr,
+                                 parse_hlo, trip_counts_from_text,
+                                 while_trip_count)
+from repro.core.machine import MachineModel
+
+
+_MEM_PORTS = ("DMA", "ICI", "MEM")
+
+
+def _params_in_order(comp) -> list:
+    """Parameter instructions sorted by their declared parameter index
+    (HLO text lists them in dataflow order, not index order)."""
+    ps = [i for i in comp.instrs if i.opcode == "parameter"]
+
+    def key(i):
+        m = re.search(r"parameter_index=(\d+)", i.attrs)
+        return int(m.group(1)) if m else 1 << 30
+    return sorted(ps, key=key)
+
+
+def _is_mem_port(p: str) -> bool:
+    return p.startswith(_MEM_PORTS)
+
+
+@dataclasses.dataclass
+class Report:
+    tp_cycles: float              # max per-port occupation (incl. DMA/ICI)
+    cp_cycles: float              # latency-critical path (in-core)
+    serial_cycles: float          # sum of sequential loop floors
+    port_occupation: dict         # port -> cycles
+    flops: float
+    bytes_hbm: float
+    coll_bytes: dict              # kind -> wire bytes
+    n_instrs: int
+    unknown_ops: int
+    trips_seen: dict              # loop name -> trips
+    loop_bytes: dict = dataclasses.field(default_factory=dict)
+    # loop name -> (trips, bytes/iter, flops/iter) for bottleneck attribution
+
+    @property
+    def tp_incore_cycles(self) -> float:
+        """OSACA semantics: the in-core bound assumes operands resident
+        (L1 on CPU, VMEM on TPU) — memory/interconnect ports excluded."""
+        vals = [c for p, c in self.port_occupation.items()
+                if not _is_mem_port(p)]
+        return max(vals) if vals else 0.0
+
+    @property
+    def bound_cycles(self) -> float:
+        """ECM-style full bound: all ports + sequential loop floors."""
+        return max(self.tp_cycles, self.serial_cycles)
+
+    @property
+    def bound_incore_cycles(self) -> float:
+        return max(self.tp_incore_cycles, self.serial_cycles)
+
+    def seconds(self, machine: MachineModel) -> float:
+        return self.bound_cycles / machine.clock_hz
+
+    def seconds_incore(self, machine: MachineModel) -> float:
+        return self.bound_incore_cycles / machine.clock_hz
+
+    def bottleneck(self) -> str:
+        if not self.port_occupation:
+            return "none"
+        if self.serial_cycles > self.tp_cycles:
+            return "LCD(serial)"
+        return max(self.port_occupation, key=self.port_occupation.get)
+
+
+class Analyzer:
+    def __init__(self, machine: MachineModel, n_devices: int = 1):
+        self.machine = machine
+        self.n_devices = n_devices
+
+    # -- public ------------------------------------------------------------
+    def analyze_text(self, hlo_text: str) -> Report:
+        mod = parse_hlo(hlo_text)
+        trips = trip_counts_from_text(hlo_text)
+        return self.analyze_module(mod, trips)
+
+    def analyze_module(self, mod: HloModule, trips: dict) -> Report:
+        acc = _Acc()
+        self._comp(mod, mod.entry, trips, acc, mult=1.0)
+        tp = max(acc.ports.values()) if acc.ports else 0.0
+        return Report(
+            tp_cycles=tp, cp_cycles=acc.cp, serial_cycles=acc.serial,
+            port_occupation=dict(acc.ports), flops=acc.flops,
+            bytes_hbm=acc.bytes_hbm, coll_bytes=dict(acc.coll),
+            n_instrs=acc.n, unknown_ops=acc.unknown,
+            trips_seen=dict(acc.trips_seen),
+            loop_bytes=dict(acc.loop_bytes))
+
+    # -- internals ----------------------------------------------------------
+    def _occupy(self, acc, cls: str, units: float, mult: float):
+        entry = self.machine.table.get(cls)
+        if entry is None:
+            entry = self.machine.table["vpu"]
+        cyc = units * entry.cycles_per_unit * mult
+        share = cyc / len(entry.ports)
+        for p in entry.ports:
+            acc.ports[p] += share
+        return cyc
+
+    _SLICE_LIKE = frozenset({"slice", "dynamic-slice", "gather"})
+    _FUSIBLE = frozenset({"fusion", "reduce", "broadcast", "transpose",
+                          "copy", "convert", "reshape", "bitcast"}) | \
+        isa.CHEAP_EW | isa.XLU_OPS | isa.DIV_OPS
+
+    def _internal_edges(self, comp) -> set:
+        """Values that XLA:TPU would keep in VMEM: produced by a fusible
+        op with ALL consumers fusible in the same computation. The CPU
+        backend (which we parse) fuses at different granularity; without
+        this projection scan-body elementwise chains are charged one HBM
+        round-trip per op. Diamonds (<=4 fusible consumers, e.g. the
+        online-softmax p -> {sum, dot}) fuse on TPU via producer
+        duplication, so they are internal too (DESIGN.md §7)."""
+        cons: dict = {}
+        for i in comp.instrs:
+            for o in i.operands:
+                cons.setdefault(o, []).append(i)
+        internal = set()
+        for i in comp.instrs:
+            if i.opcode not in self._FUSIBLE or i.is_root:
+                continue
+            if len(i.shapes) != 1:
+                continue
+            cs = cons.get(i.name, [])
+            if not cs or len(cs) > 4:
+                continue
+            # NOTE: a `dot` consumer does NOT make an edge internal — MXU
+            # operands are materialized (that is exactly what the Pallas
+            # flash kernel eliminates, see EXPERIMENTS.md §Perf).
+            if all(c.opcode in self._FUSIBLE for c in cs):
+                internal.add(i.name)
+        return internal
+
+    def _hbm_bytes(self, mod, instr: Instr, shapes_of,
+                   internal: set = frozenset()) -> float:
+        """HBM traffic of one op boundary, slice-aware: a (dynamic-)slice
+        or gather reads only the slice, not its (possibly scan-stacked)
+        operand; a dynamic-update-slice touches only the update region."""
+        op = instr.opcode
+        res = sum(s.bytes for s in instr.shapes)
+        if instr.name in internal:
+            res = 0.0           # stays in VMEM (fused into its consumer)
+        if op == "convert":
+            return 0.0          # native-bf16 projection (see fusion case)
+        if op in self._SLICE_LIKE:
+            return 2.0 * res
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = shapes_of.get(instr.operands[1]) \
+                if len(instr.operands) > 1 else None
+            ub = upd.bytes if upd is not None else res
+            return 2.0 * ub
+
+        def op_bytes(opnd: str) -> float:
+            if opnd in internal:
+                return 0.0
+            s = shapes_of.get(opnd)
+            return float(s.bytes) if s is not None else 0.0
+
+        if op == "fusion":
+            body = mod.computations.get(instr.attr_comp("calls") or "")
+            total = float(res)
+            if body is None:
+                return total + sum(op_bytes(o) for o in instr.operands)
+            # fusion rooted in a dynamic-update-slice updates in place:
+            # traffic = the update region, not the full carried buffer
+            by_name = body.by_name()
+            root = body.root
+            for _ in range(4):      # unwrap trivial roots (incl. the
+                # XLA:CPU float-normalization converts, DESIGN.md §7)
+                if root.opcode in ("bitcast", "copy", "reshape",
+                                   "transpose", "convert") and root.operands:
+                    nxt = by_name.get(root.operands[0])
+                    if nxt is None:
+                        break
+                    root = nxt
+                else:
+                    break
+            # pure dtype-convert fusion: does not exist on native-bf16 TPUs
+            # (CPU backend upcasts bf16 ops to f32 and materializes copies)
+            if body.root.opcode == "convert" and root.opcode == "parameter":
+                return 0.0
+            dus_root = False
+            res_elems = sum(s.elems for s in instr.shapes)
+            if root.opcode == "dynamic-update-slice" and res > 0:
+                dus_root = True
+                b_shapes = {i.name: i.shape for i in body.instrs}
+                upd = b_shapes.get(root.operands[1]) \
+                    if len(root.operands) > 1 else None
+                if upd is not None:
+                    total = 2.0 * upd.bytes
+            params = _params_in_order(body)
+            for idx, opnd in enumerate(instr.operands):
+                if dus_root:
+                    # in-place update fusion: any operand with the target
+                    # buffer's element count is a (possibly dtype-
+                    # normalized) version of the buffer being updated —
+                    # physically only the update region is touched.
+                    s_op = shapes_of.get(opnd)
+                    if s_op is not None and s_op.elems == res_elems:
+                        continue
+                full = op_bytes(opnd)
+                pname = params[idx].name if idx < len(params) else None
+                if pname is None or full == 0.0:
+                    total += full
+                    continue
+                cons = [i for i in body.instrs if pname in i.operands]
+                if cons and all(c.opcode in self._SLICE_LIKE for c in cons):
+                    total += sum(sum(sh.bytes for sh in c.shapes)
+                                 for c in cons)
+                else:
+                    total += full
+            return total
+        return float(res) + sum(op_bytes(o) for o in instr.operands)
+
+    def _instr_cost(self, mod, instr: Instr, shapes_of, trips, acc,
+                    mult: float) -> float:
+        """Occupies ports; returns this instruction's own min-cycles
+        (used for CP/LCD edge weights)."""
+        op = instr.opcode
+        if op == "fusion":
+            body = mod.computations.get(instr.attr_comp("calls") or "")
+            own = 0.0
+            if body is not None:
+                own = self._comp(mod, body, trips, acc, mult,
+                                 hbm_boundary=False)
+            return own
+        if op in ("while",):
+            body = mod.computations.get(instr.attr_comp("body") or "")
+            n = while_trip_count(mod, instr, trips)
+            acc.trips_seen[instr.name] = n
+            if body is None:
+                return 0.0
+            sub = _Acc()
+            body_cp = self._comp(mod, body, trips, sub, 1.0)
+            body_tp = max((c for p, c in sub.ports.items()
+                           if not _is_mem_port(p)), default=0.0)
+            floor = n * max(body_tp, body_cp, sub.serial)
+            # merge: occupation scaled by trips
+            for p, c in sub.ports.items():
+                acc.ports[p] += c * n * mult
+            acc.flops += sub.flops * n * mult
+            acc.bytes_hbm += sub.bytes_hbm * n * mult
+            for k, v in sub.coll.items():
+                acc.coll[k] += v * n * mult
+            acc.n += sub.n
+            acc.unknown += sub.unknown
+            acc.serial += floor * mult
+            acc.trips_seen.update(sub.trips_seen)
+            acc.loop_bytes.update(sub.loop_bytes)
+            acc.loop_bytes[instr.name] = (n, sub.bytes_hbm, sub.flops)
+            return floor
+        if op in ("conditional", "call", "async-start"):
+            tgt = instr.attr_comp("calls") or instr.attr_comp("to_apply")
+            body = mod.computations.get(tgt or "")
+            if body is not None:
+                return self._comp(mod, body, trips, acc, mult,
+                                  hbm_boundary=False)
+            return 0.0
+
+        u = isa.decompose(instr, shapes_of, self.n_devices)
+        own = 0.0
+        for cls, units in u.uops:
+            cyc = self._occupy(acc, cls, units, mult) / mult
+            if cls not in ("dma", "ici"):
+                own += cyc      # CP/LCD chains are in-core (prefetchable
+                                # memory traffic is not a dependency)
+        acc.flops += u.flops * mult
+        if u.coll_bytes:
+            acc.coll[u.coll_kind] += u.coll_bytes * mult
+        acc.n += 1
+        acc.unknown += int(u.unknown)
+        return own
+
+    def _comp(self, mod, comp: Computation, trips, acc, mult: float,
+              hbm_boundary: bool = True) -> float:
+        """Analyze a computation; returns its CP length (cycles)."""
+        shapes_of = {i.name: i.shape for i in comp.instrs}
+        internal = self._internal_edges(comp) if hbm_boundary else frozenset()
+        # union cap: N slices of one source stream the source once
+        slice_budget: dict = {}
+        # carry double-buffer copies feeding only the root tuple are
+        # removed by XLA copy elision -> free
+        n_cons: dict = {}
+        for i in comp.instrs:
+            for o in i.operands:
+                n_cons[o] = n_cons.get(o, 0) + 1
+        root = comp.root
+        elided = {
+            i.name for i in comp.instrs
+            if i.opcode == "copy" and n_cons.get(i.name, 0) <= 1 and
+            root.opcode == "tuple" and i.name in root.operands}
+
+        depth: dict = {}
+        cp = 0.0
+        for instr in comp.instrs:
+            if instr.name in elided:     # alias-elided carry copy: free
+                d = max((depth.get(o, 0.0) for o in instr.operands),
+                        default=0.0)
+                depth[instr.name] = d
+                continue
+            own = self._instr_cost(mod, instr, shapes_of, trips, acc, mult)
+            lat = self._latency(instr, own)
+            d = lat + max((depth.get(o, 0.0) for o in instr.operands),
+                          default=0.0)
+            depth[instr.name] = d
+            cp = max(cp, d)
+            if hbm_boundary and instr.opcode != "while" and \
+                    instr.opcode not in isa.FREE_OPS:
+                b = self._hbm_bytes(mod, instr, shapes_of, internal)
+                if instr.opcode in self._SLICE_LIKE and instr.operands:
+                    src = instr.operands[0]
+                    s = shapes_of.get(src)
+                    if s is not None:
+                        left = slice_budget.setdefault(src, float(s.bytes))
+                        read = min(b / 2.0, left)
+                        slice_budget[src] = left - read
+                        b = read + b / 2.0        # capped read + write
+                acc.bytes_hbm += b * mult
+                self._occupy(acc, "dma", b, mult)
+        acc.cp = max(acc.cp, cp)
+        return cp
+
+    def _latency(self, instr: Instr, own_cycles: float) -> float:
+        base = {
+            "dot": self.machine.table["mxu"].latency,
+            "while": 0.0, "fusion": 0.0,
+        }.get(instr.opcode)
+        if base is None:
+            cls = ("xlu" if instr.opcode in isa.XLU_OPS else
+                   "vdiv" if instr.opcode in isa.DIV_OPS else "vpu")
+            base = self.machine.table[cls].latency
+        if instr.opcode in isa.FREE_OPS:
+            base = 0.0
+        # a consumer needing the full result also waits for throughput
+        return base + own_cycles
+
+
+class _Acc:
+    def __init__(self):
+        self.ports = defaultdict(float)
+        self.flops = 0.0
+        self.bytes_hbm = 0.0
+        self.coll = defaultdict(float)
+        self.n = 0
+        self.unknown = 0
+        self.serial = 0.0
+        self.cp = 0.0
+        self.trips_seen = {}
+        self.loop_bytes = {}
+
+
+def analyze(hlo_text: str, machine: MachineModel,
+            n_devices: int = 1) -> Report:
+    return Analyzer(machine, n_devices).analyze_text(hlo_text)

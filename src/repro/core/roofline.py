@@ -1,0 +1,138 @@
+"""§Roofline: three-term analysis of every compiled dry-run cell.
+
+    compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM bw)   [WA/RMW-adjusted]
+    collective term = wire bytes / (chips x ICI bw)
+
+Numbers come from the port-model analyzer's trip-multiplied accounting
+(XLA's cost_analysis visits while bodies once — see portmodel.py); raw
+cost_analysis values are kept alongside for the naive-baseline comparison.
+The in-core port model supplies a *tighter* compute bound (T_comp_port)
+than flops/peak — the paper's model used "as part of holistic performance
+models such as Roofline" (paper §I.A).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+from repro.core import portmodel
+from repro.core.machine import MACHINES, MachineModel
+from repro.utils.hw import PEAK_FLOPS, HBM_BW, ICI_BW
+
+
+@dataclasses.dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # per-device terms, seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    t_compute_port: float         # port-model in-core bound (>= t_compute)
+    dominant: str
+    # accounting (per device)
+    flops: float
+    bytes_hbm: float
+    coll_bytes: dict
+    wa_ratio: float
+    # usefulness
+    model_flops: float            # 6*N*D (global)
+    useful_ratio: float           # model_flops / (flops * n_devices)
+    bottleneck_port: str
+    peak_fraction: float          # (model_flops/chips/peak) / bound
+    notes: str = ""
+
+    @property
+    def bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+def collective_seconds(coll_bytes: dict, ici_bw: float = ICI_BW,
+                       links: int = 4) -> float:
+    """Wire bytes already include ring factors (isa.py); a chip moves its
+    share over `links` links in parallel for ring algorithms."""
+    total = sum(coll_bytes.values())
+    return total / (ici_bw * links)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode counts one
+    token per sequence, prefill counts forward-only (2*N*D)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch            # one step
+    return 2.0 * n * tokens
+
+
+def analyze_cell(rec: dict, cfg, shape, hlo_text: str | None = None,
+                 machine: MachineModel | None = None,
+                 report: "portmodel.Report | None" = None) -> RooflineCell:
+    """Build the roofline row for one dry-run record.
+
+    rec: the JSON record from repro.launch.dryrun. hlo_text: compiled HLO
+    (for port-model accounting); without it we fall back to raw
+    cost_analysis (documented as under-counting loops).
+    """
+    machine = machine or MACHINES["tpu_v5e"]
+    chips = rec["n_devices"]
+    if report is None and hlo_text is not None:
+        report = portmodel.analyze(hlo_text, machine, n_devices=chips)
+
+    if report is not None:
+        flops = report.flops
+        bytes_hbm = report.bytes_hbm
+        coll = report.coll_bytes
+        t_port = report.seconds(machine)
+        port = report.bottleneck()
+    else:
+        flops = rec["cost"]["flops"]
+        bytes_hbm = rec["cost"]["bytes_accessed"]
+        coll = {k: v["bytes"] for k, v in rec.get("collectives", {}).items()}
+        t_port = 0.0
+        port = "n/a"
+
+    wa_ratio = rec.get("wa_ratio", 1.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_hbm * wa_ratio / HBM_BW
+    t_x = collective_seconds(coll)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    if t_port > t_c and t_port >= max(t_m, t_x):
+        dominant = "compute(port)"
+    else:
+        dominant = max(terms, key=terms.get)
+
+    mf = model_flops_for(cfg, shape)
+    useful = mf / max(flops * chips, 1.0)
+    bound = max(t_c, t_m, t_x, t_port)
+    ideal = mf / chips / PEAK_FLOPS
+    return RooflineCell(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        n_devices=chips, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        t_compute_port=t_port, dominant=dominant, flops=flops,
+        bytes_hbm=bytes_hbm, coll_bytes=dict(coll), wa_ratio=wa_ratio,
+        model_flops=mf, useful_ratio=useful, bottleneck_port=port,
+        peak_fraction=ideal / bound if bound > 0 else 0.0)
+
+
+def to_markdown(cells: list) -> str:
+    hdr = ("| arch | shape | mesh | T_comp | T_comp(port) | T_mem | T_coll "
+           "| dominant | MF/HLO | peak-frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {c.t_compute*1e3:.2f}ms "
+            f"| {c.t_compute_port*1e3:.2f}ms | {c.t_memory*1e3:.2f}ms "
+            f"| {c.t_collective*1e3:.2f}ms | {c.dominant} "
+            f"| {c.useful_ratio:.2f} | {c.peak_fraction:.1%} |")
+    return hdr + "\n".join(rows)

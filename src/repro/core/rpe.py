@@ -1,0 +1,261 @@
+"""The paper's Fig. 3 harness: relative-prediction-error validation of the
+in-core port model vs the naive baseline over 13 streaming kernels x 8
+lowering variants x 4 sizes = 416 test blocks.
+
+The paper's variants were {Armclang, GCC, oneAPI, Clang} x {-O1..-Ofast}
+(416 tests, 290 unique assembly bodies); a single-compiler JAX stack
+varies the *lowering* instead: dtype, chunking, loop style, donation,
+strided views, Pallas-interpret. Degenerate duplicates are faithful —
+the paper had them too.
+
+RPE convention (matches the paper's histogram): rpe = (t_meas - t_pred)
+/ t_meas. Positive => prediction FASTER than measurement (the lower-bound
+side, right of the red line); negative => prediction slower; <= -1.0 =>
+off by more than 2x (the left bucket).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baseline as baseline_lib
+from repro.core import portmodel
+from repro.core.ubench import calibrated_host_model, host_peaks
+from repro.kernels.stream import ref as R
+
+SIZES = {                   # streaming-regime working sets (f32 elements)
+    "S": 1 << 18,           # 1 MiB
+    "M": 1 << 20,           # 4 MiB
+    "L": 1 << 22,           # 16 MiB
+    "XL": 1 << 23,          # 32 MiB
+}
+# NOTE (DESIGN.md §7): the paper validates the pure in-core (L1-resident)
+# bound with hardware counters and sub-microsecond timing; this container
+# has neither (jax dispatch overhead ~15us). We therefore validate the
+# ECM-style holistic bound max(in-core, memory) at streaming sizes — the
+# downstream use the paper itself names for its model (§I.A, §II). The
+# lower-bound acceptance criterion (errors right of zero) is unchanged.
+
+VARIANTS = ("jnp", "bf16", "chunked", "unroll2", "fori", "donated",
+            "reversed", "pallas")
+
+
+def _dims2(n):
+    rows = max(8, int(np.sqrt(n)) // 128 * 128)
+    return rows, max(128, n // rows)
+
+
+def _dims3(n):
+    side = max(8, int(round(n ** (1 / 3))))
+    return side, side, max(8, n // (side * side))
+
+
+def make_inputs(kernel: str, n: int, dtype=jnp.float32):
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 3)
+    if kernel in ("jacobi_2d5pt", "gauss_seidel_2d5pt"):
+        h, w = _dims2(n)
+        return (jax.random.normal(ks[0], (h, w), dtype),)
+    if kernel in ("jacobi_3d7pt", "jacobi_3d11pt", "jacobi_3d27pt"):
+        d, h, w = _dims3(n)
+        return (jax.random.normal(ks[0], (d, h, w), dtype),)
+    if kernel == "pi_integration":
+        return (n,)
+    vecs = {"init": 0, "copy": 1, "update": 1, "sum_reduction": 1,
+            "add": 2, "stream_triad": 2, "schoenauer_triad": 3}[kernel]
+    return tuple(jax.random.normal(ks[i], (n,), dtype)
+                 for i in range(vecs))
+
+
+def base_fn(kernel: str, n: int):
+    if kernel == "init":
+        return lambda: R.init((n,))
+    if kernel == "pi_integration":
+        return lambda: R.pi_integration(n)
+    return getattr(R, kernel)
+
+
+def build_variant(kernel: str, variant: str, n: int):
+    """Returns (jitted_fn, args) for one test block."""
+    fn = base_fn(kernel, n)
+    args = make_inputs(kernel, n)
+    if kernel in ("init", "pi_integration"):
+        args = ()
+
+    if variant == "bf16":
+        args = tuple(a.astype(jnp.bfloat16) if hasattr(a, "astype") else a
+                     for a in args)
+        if kernel == "init":
+            return jax.jit(lambda: R.init((n,), dtype=jnp.bfloat16)), ()
+    if variant == "chunked" and args and args[0].ndim == 1:
+        def chunked(*xs):
+            parts = [tuple(x[i::4] for x in xs) for i in range(4)]
+            return jnp.concatenate([fn(*p) if not jnp.isscalar(fn(*p))
+                                    else fn(*p)[None] for p in parts]) \
+                if kernel != "sum_reduction" else \
+                sum(fn(*p) for p in parts)
+        return jax.jit(chunked), args
+    if variant == "unroll2" and args and args[0].ndim == 1:
+        def unroll2(*xs):
+            h = xs[0].shape[0] // 2
+            lo = fn(*(x[:h] for x in xs))
+            hi = fn(*(x[h:] for x in xs))
+            if lo.ndim == 0:
+                return lo + hi
+            return jnp.concatenate([lo, hi])
+        return jax.jit(unroll2), args
+    if variant == "fori" and args and args[0].ndim == 1:
+        rows = 64
+        def fori(*xs):
+            xs2 = tuple(x[: (x.shape[0] // rows) * rows].reshape(rows, -1)
+                        for x in xs)
+            def body(i, acc):
+                y = fn(*(x[i] for x in xs2))
+                if y.ndim == 0:
+                    return acc + y
+                return jax.lax.dynamic_update_index_in_dim(acc, y, i, 0)
+            y0 = fn(*(x[0] for x in xs2))
+            init = (jnp.zeros((), y0.dtype) if y0.ndim == 0 else
+                    jnp.zeros((rows,) + y0.shape, y0.dtype))
+            return jax.lax.fori_loop(0, rows, body, init)
+        return jax.jit(fori), args
+    if variant == "donated" and args and kernel in ("update",):
+        return jax.jit(lambda a: R.update(a), donate_argnums=(0,)), args
+    if variant == "reversed" and args and args[0].ndim >= 1:
+        def rev(*xs):
+            out = fn(*(jnp.flip(x, axis=0) for x in xs))
+            return jnp.flip(out, axis=0) if out.ndim else out
+        return jax.jit(rev), args
+    if variant == "pallas":
+        from repro.kernels.stream import ops as K
+        name = {"init": None, "pi_integration": None}.get(kernel, kernel)
+        if kernel == "init":
+            return jax.jit(lambda: K.init((_dims2(n)), impl="ref")), ()
+        if hasattr(K, kernel):
+            return jax.jit(partial(getattr(K, kernel), impl="ref")), args
+    # default: plain jnp
+    return jax.jit(fn), args
+
+
+def measure(fn, args, reps: int = 5, inner: int = 3,
+            consumes_args: bool = False) -> float:
+    if consumes_args:
+        # donated buffers are dead after one call: re-clone outside timing
+        best = float("inf")
+        for _ in range(reps + 1):
+            fresh = tuple(a + 0 if hasattr(a, "dtype") else a for a in args)
+            jax.block_until_ready(fresh)
+            t0 = time.perf_counter()
+            out = fn(*fresh)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+@dataclasses.dataclass
+class RpeRecord:
+    kernel: str
+    variant: str
+    size: str
+    t_meas: float
+    t_port: float
+    t_naive: float
+
+    @property
+    def rpe_port(self) -> float:
+        return (self.t_meas - self.t_port) / self.t_meas
+
+    @property
+    def rpe_naive(self) -> float:
+        return (self.t_meas - self.t_naive) / self.t_meas
+
+
+def run_block(kernel: str, variant: str, size: str) -> RpeRecord:
+    from repro.core.ubench import tier_bw
+    n = SIZES[size]
+    fn, args = build_variant(kernel, variant, n)
+    machine = calibrated_host_model()
+    peak, bw = host_peaks()
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    t_meas = measure(fn, args, consumes_args=(variant == "donated"))
+    rep = portmodel.analyze(compiled.as_text(), machine)
+    # ECM bound: in-core TP/LCD + memory term at the working set's tier
+    ws = sum(4 * (a.size if hasattr(a, "size") else 1) for a in args) or 4 * n
+    t_mem = rep.bytes_hbm / tier_bw(float(ws))
+    t_port = max(rep.seconds_incore(machine), t_mem)
+    ca = compiled.cost_analysis() or {}
+    t_naive = baseline_lib.predict(ca, machine, peak, bw).seconds
+    return RpeRecord(kernel, variant, size, t_meas, t_port, t_naive)
+
+
+def run_suite(kernels=None, variants=VARIANTS, sizes=tuple(SIZES),
+              progress=None) -> list:
+    kernels = kernels or R.KERNELS_13
+    out = []
+    for k in kernels:
+        for v in variants:
+            for s in sizes:
+                try:
+                    out.append(run_block(k, v, s))
+                except Exception as e:  # noqa: BLE001 — suite must finish
+                    out.append(RpeRecord(k, v, s, float("nan"),
+                                         float("nan"), float("nan")))
+                if progress:
+                    progress(out[-1])
+    return out
+
+
+def summarize(records: list) -> dict:
+    def stats(rpes):
+        r = np.array([x for x in rpes if np.isfinite(x)])
+        if r.size == 0:
+            return {}
+        return {
+            "n": int(r.size),
+            "right_of_zero_pct": float((r >= 0).mean() * 100),
+            "within10_pct": float(((r >= 0) & (r < 0.10)).mean() * 100),
+            "within20_pct": float(((r >= 0) & (r < 0.20)).mean() * 100),
+            "abs_within10_pct": float((np.abs(r) < 0.10).mean() * 100),
+            "factor2_off": int((r <= -1.0).sum()),
+            "mean_underpred_rpe": float(r[r >= 0].mean()) if (r >= 0).any()
+            else None,
+            "mean_abs_rpe": float(np.abs(r).mean()),
+        }
+    return {
+        "port_model": stats([x.rpe_port for x in records]),
+        "naive_baseline": stats([x.rpe_naive for x in records]),
+        "n_blocks": len(records),
+    }
+
+
+def histogram(records: list, which: str = "port", width: float = 0.10):
+    """Bucketized RPE histogram (paper Fig. 3 bars)."""
+    vals = [getattr(r, f"rpe_{'port' if which == 'port' else 'naive'}")
+            for r in records]
+    vals = [v for v in vals if np.isfinite(v)]
+    buckets: dict = {}
+    for v in vals:
+        if v <= -1.0:
+            key = "<=-1.0"
+        else:
+            b = np.floor(v / width) * width
+            key = f"{b:+.1f}"
+        buckets[key] = buckets.get(key, 0) + 1
+    return dict(sorted(buckets.items()))

@@ -1,0 +1,131 @@
+"""Microbenchmark-driven machine-model calibration (paper §II).
+
+ibench-style methodology: each op class is measured with a dependency-
+chained loop (x = op(x, b)) over an L1-resident working set inside one
+jit — dispatch overhead amortizes over K chained iterations and the chain
+pins the op on its functional unit, exactly how the paper's
+microbenchmarks extract per-instruction throughput. Streaming (DMA-class)
+bandwidth is measured separately on a memory-sized copy.
+
+The TPU machine files are spec-derived (no TPU in this container —
+DESIGN.md §7); the host model produced here drives the RPE validation
+(core/rpe.py, paper Fig. 3).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.machine import MachineModel, host_cpu_model
+
+N_SMALL = 8192             # 32 KiB f32 — L1/L2-resident (in-core regime)
+N_BIG = 1 << 23            # 32 MiB — memory regime (DMA class)
+MAT = 512
+K_CHAIN = 256
+
+
+def _chain(op, n_iter):
+    def f(x, *consts):
+        def body(_, x):
+            return op(x, *consts)
+        return jax.lax.fori_loop(0, n_iter, body, x)
+    return jax.jit(f)
+
+
+def _timeit(fn, *args, reps: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_host_rates(n: int = N_SMALL) -> dict:
+    key = jax.random.PRNGKey(0)
+    a = jnp.abs(jax.random.normal(key, (n,), jnp.float32)) + 0.5
+    b = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)) + 0.5
+    idx = jax.random.permutation(jax.random.PRNGKey(3), n)
+    m1 = jax.random.normal(key, (MAT, MAT), jnp.float32) * 0.01
+    big = jax.random.normal(key, (N_BIG,), jnp.float32)
+
+    t_add = _timeit(_chain(lambda x, c: x + c, K_CHAIN), a, b) / K_CHAIN
+    t_fma = _timeit(_chain(lambda x, c: x * 0.999 + c, K_CHAIN), a, b) / K_CHAIN
+    t_div = _timeit(_chain(lambda x, c: c / (x + 1.0), K_CHAIN), a, b) / K_CHAIN
+    t_exp = _timeit(_chain(lambda x: jnp.exp(-x), K_CHAIN), a) / K_CHAIN
+    t_gat = _timeit(_chain(lambda x, i: x[i], K_CHAIN), a, idx) / K_CHAIN
+    t_mov = _timeit(_chain(lambda x: jnp.roll(x, 1), K_CHAIN), a) / K_CHAIN
+    t_mm = _timeit(_chain(lambda x, m: x @ m, 8), m1, m1) / 8
+    t_cp = _timeit(jax.jit(lambda x: x + 0.0), big)
+    t_tr = _timeit(jax.jit(lambda x, y: x + 2.0 * y), big, big * 0.5)
+
+    # memory-tier bandwidths (ECM): chained add at tiered working sets
+    tiers = []
+    for n_t, cap in ((1 << 13, 128e3), (1 << 16, 2e6), (1 << 20, 24e6)):
+        at = jnp.abs(jax.random.normal(key, (n_t,), jnp.float32)) + 0.5
+        bt = at * 0.5
+        reps = max(16, K_CHAIN // max(1, n_t // 8192))
+        t = _timeit(_chain(lambda x, c: x + c, reps), at, bt) / reps
+        tiers.append((cap, 3 * 4 * n_t / t))   # 2 reads + 1 write
+    dram_bw = max(2 * 4 * N_BIG / t_cp, 3 * 4 * N_BIG / t_tr)
+    tiers.append((float("inf"), dram_bw))
+
+    blocks = n / (8 * 128)
+    mxu_passes = (MAT / 128) ** 3
+    return {
+        "vpu": blocks / t_fma,
+        "xlu": blocks / t_exp,
+        "vdiv": blocks / t_div,
+        "vlsu": blocks / t_mov,
+        "gather4": blocks / t_gat,
+        "mxu": mxu_passes / t_mm,
+        "dma": dram_bw,
+        "sc": 1e9,
+        "_raw": {"add_s": t_add, "fma_s": t_fma, "div_s": t_div,
+                 "exp_s": t_exp, "gather_s": t_gat, "move_s": t_mov,
+                 "matmul_s": t_mm, "copy_big_s": t_cp,
+                 "flops_matmul": 2 * MAT ** 3 / t_mm,
+                 "stream_bw": dram_bw,
+                 "mem_tiers": tiers},
+    }
+
+
+_CAL_CACHE: dict = {}
+
+
+def calibrated_host_model(refresh: bool = False) -> MachineModel:
+    if "model" not in _CAL_CACHE or refresh:
+        rates = measure_host_rates()
+        raw = rates.pop("_raw")
+        m = host_cpu_model(rates)
+        _CAL_CACHE["model"] = m
+        _CAL_CACHE["raw"] = raw
+    return _CAL_CACHE["model"]
+
+
+def host_peaks() -> tuple:
+    """(peak_flops, mem_bw) for the naive-baseline model on this host."""
+    calibrated_host_model()
+    raw = _CAL_CACHE["raw"]
+    return raw["flops_matmul"], raw["stream_bw"]
+
+
+def mem_tiers() -> list:
+    """[(capacity_bytes, bytes/s)] ECM memory tiers, DRAM last."""
+    calibrated_host_model()
+    return _CAL_CACHE["raw"]["mem_tiers"]
+
+
+def tier_bw(ws_bytes: float) -> float:
+    for cap, bw in mem_tiers():
+        if ws_bytes <= cap:
+            return bw
+    return mem_tiers()[-1][1]

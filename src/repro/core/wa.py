@@ -1,0 +1,189 @@
+"""Write-allocate / read-modify-write traffic analysis (paper §III).
+
+On a cache-line CPU, a store miss reads the line before overwriting it
+(write-allocate) unless the core claims the line (Grace), SpecI2M kicks in
+(SPR, only near bandwidth saturation), or the code uses non-temporal
+stores (Zen 4). The TPU analogue (DESIGN.md §2): HBM writes land in
+(8,128)-element tiles (fp32; (16,128) bf16 packed) — a store that does not
+overwrite a full tile forces the memory system to read the tile first.
+System-level analogues: a non-donated buffer that XLA must copy before a
+dynamic-update-slice (full write-allocate of the whole buffer), and
+unaligned Pallas output BlockSpecs.
+
+This module provides:
+ * tile-level RMW classification for a store given shape/offset/donation
+ * the three behavioural machine modes of paper Fig. 4 so the
+   cross-vendor comparison is reproducible as a model:
+     - auto_claim        (Grace / TPU): RMW elided whenever a full tile is
+                          provably overwritten
+     - saturation_gated  (SPR SpecI2M): evasion only on the fraction of
+                          stores issued while the memory interface is
+                          >= `gate` saturated; NT stores leave ~10% residue
+     - explicit_only     (Zen 4): standard stores always allocate;
+                          NT stores evade fully
+ * module-level scan: WA-adjusted store traffic for a parsed HLO module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.hloparse import HloModule, Instr, parse_hlo
+from repro.utils.hw import dtype_bytes
+
+
+def native_tile(dtype: str) -> tuple:
+    packing = {"f32": 1, "s32": 1, "u32": 1,
+               "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+               "s8": 4, "u8": 4, "f8e4m3fn": 4, "f8e5m2": 4}.get(dtype, 1)
+    return (8 * packing, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreProfile:
+    stored_bytes: float           # payload the program wants to write
+    rmw_read_bytes: float         # extra reads forced by partial tiles
+    copy_bytes: float = 0.0       # whole-buffer copies (missing donation)
+
+    @property
+    def traffic(self) -> float:
+        # write + forced reads + copy (read+write)
+        return self.stored_bytes + self.rmw_read_bytes + 2 * self.copy_bytes
+
+    @property
+    def ratio(self) -> float:
+        return self.traffic / max(self.stored_bytes, 1.0)
+
+
+def store_profile(shape_dims: tuple, dtype: str, *,
+                  offset_aligned: bool = True,
+                  donated: bool = True,
+                  full_overwrite: bool = True,
+                  buffer_bytes: float | None = None) -> StoreProfile:
+    """Classify one store region against the native tile grid.
+
+    shape_dims: dims of the written region. offset_aligned: region start is
+    tile-aligned (False for unknown dynamic offsets). donated: the target
+    buffer aliases an input (in-place); if False and the write is partial
+    (full_overwrite=False at buffer granularity), XLA materializes a copy
+    of the whole buffer first.
+    """
+    st, sl = native_tile(dtype)
+    eb = dtype_bytes(dtype)
+    elems = math.prod(shape_dims) if shape_dims else 1
+    stored = float(elems * eb)
+    if len(shape_dims) == 0:
+        return StoreProfile(stored, 0.0)
+    rows = math.prod(shape_dims[:-1]) if len(shape_dims) > 1 else 1
+    cols = shape_dims[-1]
+    sub = shape_dims[-2] if len(shape_dims) > 1 else 1
+
+    # tiles touched along the minor-2 dims
+    if offset_aligned:
+        col_tiles = math.ceil(cols / sl)
+        row_tiles = math.ceil(sub / st)
+        frac_full_cols = (cols // sl) / col_tiles if col_tiles else 1.0
+        frac_full_rows = (sub // st) / row_tiles if row_tiles else 1.0
+        full_frac = frac_full_cols * frac_full_rows
+    else:
+        col_tiles = math.ceil(cols / sl) + 1
+        row_tiles = math.ceil(sub / st) + 1
+        full_frac = max(0.0, (cols - sl) / (col_tiles * sl)) * \
+            max(0.0, (sub - st) / (row_tiles * st))
+    touched = (rows // max(sub, 1)) * row_tiles * col_tiles if sub else 1
+    tile_bytes = st * sl * eb
+    touched_bytes = max(stored, touched * tile_bytes)
+    rmw = (1.0 - full_frac) * touched_bytes
+
+    copy = 0.0
+    if not donated and not full_overwrite and buffer_bytes:
+        copy = float(buffer_bytes)
+    return StoreProfile(stored, rmw, copy)
+
+
+# --- the paper's three machines as behavioural modes (Fig. 4) -------------
+
+def machine_traffic_ratio(mode: str, *, nt_stores: bool = False,
+                          bw_utilization: float = 1.0,
+                          tile_full_frac: float = 1.0) -> float:
+    """Memory-traffic / stored-data ratio for a store-only kernel.
+
+    Mirrors Fig. 4: 1.0 = perfect WA evasion, 2.0 = full write-allocate.
+    """
+    partial_extra = 1.0 - tile_full_frac          # RMW share from tiling
+    if mode == "auto_claim":            # Grace & TPU
+        return 1.0 + partial_extra
+    if mode == "saturation_gated":      # Sapphire Rapids SpecI2M
+        if nt_stores:
+            return 1.1 + partial_extra  # residual ~10% (paper Fig. 4)
+        evade = 0.25 * max(0.0, min(1.0, (bw_utilization - 0.5) / 0.5))
+        return 2.0 - evade + partial_extra
+    if mode == "explicit_only":         # Zen 4
+        return (1.0 if nt_stores else 2.0) + partial_extra
+    raise ValueError(mode)
+
+
+# --- module-level scan ------------------------------------------------------
+
+_STORED_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def analyze_module_stores(mod: HloModule) -> dict:
+    """Scan a parsed module for store-like ops and donation structure.
+
+    Returns aggregate stored/RMW/copy bytes across the entry computation
+    (fusion outputs are treated as full-overwrite aligned stores — XLA
+    lays fusion outputs on tile boundaries; dynamic-update-slices with
+    non-literal offsets are classified offset-unaligned).
+    """
+    stored = rmw = copy = 0.0
+    comps = [mod.entry]
+    seen = set()
+    while comps:
+        comp = comps.pop()
+        if comp.name in seen:
+            continue
+        seen.add(comp.name)
+        by_name = comp.by_name()
+        for i in comp.instrs:
+            for key in ("calls", "body", "condition", "to_apply"):
+                t = i.attr_comp(key)
+                if t and t in mod.computations:
+                    comps.append(mod.computations[t])
+            if i.opcode in _STORED_OPS:
+                upd = by_name.get(i.operands[1]) if len(i.operands) > 1 \
+                    else None
+                dims = upd.shape.dims if upd is not None else i.shape.dims
+                buf_dims = i.shape.dims
+                # A dus whose update spans the buffer's full minor-2 dims
+                # (scan ys / KV-cache row writes) only slides along leading
+                # dims — tile-aligned by construction. Only truly partial
+                # minor-dim updates with dynamic offsets are RMW.
+                minor_full = (len(dims) >= 2 and len(buf_dims) >= 2 and
+                              dims[-1] == buf_dims[-1] and
+                              dims[-2] == buf_dims[-2])
+                if minor_full:
+                    # whole (padded) tiles by construction: no RMW
+                    prof = store_profile(dims, i.shape.dtype)
+                    stored += prof.stored_bytes
+                else:
+                    prof = store_profile(dims, i.shape.dtype,
+                                         offset_aligned=False, donated=True,
+                                         full_overwrite=False)
+                    stored += prof.stored_bytes
+                    rmw += prof.rmw_read_bytes
+            elif i.opcode == "fusion":
+                # fresh outputs land in tile-padded buffers with no live
+                # cotenants: stores never read-modify-write (unlike CPU
+                # cache lines, which is the paper's whole point — the TPU
+                # behaves like Grace's cache-line claim by construction)
+                for s in i.shapes:
+                    stored += float(s.bytes)
+    return {"stored_bytes": stored, "rmw_read_bytes": rmw,
+            "copy_bytes": copy,
+            "wa_ratio": (stored + rmw + 2 * copy) / max(stored, 1.0)}
+
+
+def analyze_text_stores(hlo_text: str) -> dict:
+    return analyze_module_stores(parse_hlo(hlo_text))

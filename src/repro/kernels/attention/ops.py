@@ -1,0 +1,33 @@
+"""Public flash-attention wrapper with impl routing and a BHSD<->BSHD
+adapter for the model stack (models use (B, S, H, Dh))."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import flash as F
+from repro.kernels.attention import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=None, impl="auto",
+                    bq=512, bk=512):
+    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.attention(q, k, v, causal=causal, window=window)
+    return F.flash_attention(q, k, v, bq=bq, bk=bk, causal=causal,
+                             window=window, interpret=not _on_tpu())
+
+
+def flash_attention_bshd(q, k, v, **kw):
+    """(B, S, H, Dh) adapter."""
+    o = flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), **kw)
+    return jnp.swapaxes(o, 1, 2)

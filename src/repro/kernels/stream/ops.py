@@ -1,0 +1,89 @@
+"""Jitted public wrappers for the stream kernel suite.
+
+``impl`` selects between the Pallas kernel (TPU target; interpret mode on
+CPU) and the pure-jnp oracle. ``auto`` = Pallas on TPU, oracle elsewhere
+(the oracle is what XLA would fuse anyway; the kernel exists to control
+tiling and store alignment explicitly on TPU).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream import kernels as K
+from repro.kernels.stream import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _route(pallas_fn, ref_fn, impl, *args, **kw):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref_fn(*args, **kw)
+    interpret = not _on_tpu()
+    return pallas_fn(*args, interpret=interpret, **kw)
+
+
+@partial(jax.jit, static_argnames=("shape", "dtype", "impl"))
+def init(shape, scalar=3.0, dtype=jnp.float32, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.init(shape, scalar, dtype)
+    return K.init_store(shape, scalar, dtype, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def copy(b, impl="auto"):
+    return _route(K.copy, R.copy, impl, b)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def add(b, c, impl="auto"):
+    return _route(K.add, R.add, impl, b, c)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def update(a, s=2.0, impl="auto"):
+    return _route(K.update, R.update, impl, a, s)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def stream_triad(b, c, s=2.0, impl="auto"):
+    return _route(K.stream_triad, R.stream_triad, impl, b, c, s)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def schoenauer_triad(b, c, d, impl="auto"):
+    return _route(K.schoenauer_triad, R.schoenauer_triad, impl, b, c, d)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def sum_reduction(a, impl="auto"):
+    return _route(K.sum_reduction, R.sum_reduction, impl, a)
+
+
+@partial(jax.jit, static_argnames=("n", "impl"))
+def pi_integration(n, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.pi_integration(n)
+    return K.pi_integration(n, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def jacobi_2d5pt(u, impl="auto"):
+    return _route(K.jacobi_2d5pt, R.jacobi_2d5pt, impl, u)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def jacobi_3d7pt(u, impl="auto"):
+    return _route(K.jacobi_3d7pt, R.jacobi_3d7pt, impl, u)
+
+
+@partial(jax.jit, static_argnames=("sweeps", "impl"))
+def gauss_seidel_2d5pt(u, sweeps=1, impl="auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return R.gauss_seidel_2d5pt(u, sweeps)
+    return K.gauss_seidel_2d5pt(u, sweeps, interpret=not _on_tpu())

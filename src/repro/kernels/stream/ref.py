@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for the paper's 13 streaming validation kernels
+(paper §II: Jacobi stencils, ADD, COPY, Gauss-Seidel, pi, INIT,
+Schoenauer triad, sum reduction, STREAM triad, UPDATE).
+
+These are simultaneously (a) the correctness oracles for the Pallas
+kernels, (b) the measurement subjects of the RPE harness (paper Fig. 3),
+and (c) the store-traffic subjects of the WA study (paper Fig. 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(shape, scalar=3.0, dtype=jnp.float32):
+    """a[:] = s — the paper's store-only WA benchmark."""
+    return jnp.full(shape, scalar, dtype)
+
+
+def copy(b):
+    return b + 0.0       # materialized copy
+
+
+def add(b, c):
+    return b + c
+
+
+def update(a, s=2.0):
+    return a * s
+
+
+def stream_triad(b, c, s=2.0):
+    return b + s * c
+
+
+def schoenauer_triad(b, c, d):
+    return b + c * d
+
+
+def sum_reduction(a):
+    return jnp.sum(a)
+
+
+def pi_integration(n: int, dtype=jnp.float32):
+    """pi by midpoint integration of 4/(1+x^2) on [0,1]."""
+    i = jnp.arange(n, dtype=dtype)
+    x = (i + 0.5) / n
+    return jnp.sum(4.0 / (1.0 + x * x)) / n
+
+
+def jacobi_2d5pt(u):
+    """(H, W) -> interior 5-point average."""
+    return 0.25 * (u[:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, :-2] + u[1:-1, 2:])
+
+
+def jacobi_3d7pt(u):
+    c = 1.0 / 6.0
+    return c * (u[:-2, 1:-1, 1:-1] + u[2:, 1:-1, 1:-1] +
+                u[1:-1, :-2, 1:-1] + u[1:-1, 2:, 1:-1] +
+                u[1:-1, 1:-1, :-2] + u[1:-1, 1:-1, 2:])
+
+
+def jacobi_3d11pt(u):
+    """7pt + second-neighbour along the two minor axes (r=2 star, 11 pts)."""
+    c = 1.0 / 10.0
+    i = u[2:-2, 2:-2, 2:-2]
+    return c * (u[1:-3, 2:-2, 2:-2] + u[3:-1, 2:-2, 2:-2] +
+                u[2:-2, 1:-3, 2:-2] + u[2:-2, 3:-1, 2:-2] +
+                u[2:-2, 2:-2, 1:-3] + u[2:-2, 2:-2, 3:-1] +
+                u[2:-2, 2:-2, :-4] + u[2:-2, 2:-2, 4:] +
+                u[2:-2, :-4, 2:-2] + u[2:-2, 4:, 2:-2])
+
+
+def jacobi_3d27pt(u):
+    acc = 0.0
+    for dz in (0, 1, 2):
+        for dy in (0, 1, 2):
+            for dx in (0, 1, 2):
+                acc = acc + u[dz:dz + u.shape[0] - 2,
+                              dy:dy + u.shape[1] - 2,
+                              dx:dx + u.shape[2] - 2]
+    return acc / 27.0
+
+
+def gauss_seidel_2d5pt(u, sweeps: int = 1):
+    """Row-wavefront Gauss-Seidel: row i uses already-updated row i-1.
+
+    Sequential over rows (lax.scan) — the paper's latency-bound case
+    (its OSACA model over-predicts this kernel because register renaming
+    beats the modeled dependency; our LCD analysis has the same designed
+    failure mode, reported in the RPE results).
+    """
+    def sweep(u, _):
+        def row_step(prev_row, rows):
+            cur, down = rows
+            new_int = 0.25 * (prev_row[1:-1] + down[1:-1] +
+                              cur[:-2] + cur[2:])
+            # NOTE: cur.at[1:-1].set(new_int) here triggers an XLA:CPU
+            # scan miscompilation in jax 0.8.2 (compiled result differs
+            # from disable_jit); concatenate sidesteps the aliasing.
+            new = jnp.concatenate([cur[:1], new_int, cur[-1:]])
+            return new, new
+        _, body = jax.lax.scan(row_step, u[0], (u[1:-1], u[2:]))
+        return jnp.concatenate([u[:1], body, u[-1:]], axis=0), None
+    u, _ = jax.lax.scan(sweep, u, None, length=sweeps)
+    return u
+
+
+KERNELS_13 = (
+    "init", "copy", "add", "update", "stream_triad", "schoenauer_triad",
+    "sum_reduction", "pi_integration", "jacobi_2d5pt", "jacobi_3d7pt",
+    "jacobi_3d11pt", "jacobi_3d27pt", "gauss_seidel_2d5pt",
+)

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state. The single-pod mesh is 16x16 = 256 chips
+("data", "model"); the multi-pod mesh is 2x16x16 = 512 chips
+("pod", "data", "model") — the "pod" axis is a pure extra data-parallel
+axis whose gradient all-reduce crosses the inter-pod (DCN) boundary once
+per step.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devs)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} (see repro.launch.dryrun)")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many real devices exist (tests/smoke)."""
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,105 @@
+"""Core neural layers: norms, activations, rotary embeddings (RoPE / M-RoPE),
+dense & gated MLPs. Pure functions over explicit parameter pytrees."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 accumulation, cast back to input dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def dense_ffn(p: dict, x: jax.Array, act: str = "swiglu") -> jax.Array:
+    """SwiGLU (llama-family) or plain GELU (musicgen-family) MLP."""
+    if act == "swiglu":
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        h = swiglu(g, u)
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"])
+    elif act == "relu2":   # squared ReLU (Nemotron/Minitron family)
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:
+        raise ValueError(f"unknown ffn act {act}")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim//2,), fp32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.
+
+    x: (..., S, H, Dh); positions: broadcastable to (..., S) int32.
+    Rotates pairs (x[2i], x[2i+1]) — "interleaved-free" half-split layout
+    (llama convention: first half / second half).
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, theta: float,
+                sections: tuple = (2, 3, 3)) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    The rotary dims are split into (temporal, height, width) sections; each
+    section uses its own position stream.
+
+    x: (B, S, H, Dh); positions_3d: (3, B, S) int32 — [t, h, w] position ids.
+    sections: relative split of the half-dim in 8ths (t:h:w = 2:3:3 default,
+    scaled to Dh//2).
+    """
+    half = x.shape[-1] // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    # Build per-frequency position ids by section.
+    angle_parts = []
+    off = 0
+    for i, sz in enumerate(sizes):
+        f = freqs[off:off + sz]
+        pos = positions_3d[i]                                    # (B, S)
+        angle_parts.append(pos[..., None].astype(jnp.float32) * f)
+        off += sz
+    angles = jnp.concatenate(angle_parts, axis=-1)               # (B, S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jax.Array, dim: int,
+                         max_period: float = 10000.0) -> jax.Array:
+    """Absolute sinusoidal position embedding (musicgen-family backbone)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.cos(angles), jnp.sin(angles)], axis=-1)

@@ -1,0 +1,86 @@
+"""Mixture-of-Experts layer: GShard-style grouped dense dispatch.
+
+Formulation chosen for SPMD friendliness on TPU meshes (see DESIGN.md §3.2):
+activations after the attention all-reduce are replicated over the "model"
+axis, experts are sharded over "model" (expert parallelism), token groups are
+sharded over "data". Dispatch/combine are einsums against a one-hot
+(group, tokens, experts, capacity) tensor — each model shard selects its own
+experts' tokens locally, and the combine contraction over the expert axis
+produces the single per-layer all-reduce (same collective cost as a dense TP
+MLP). Over-capacity tokens are dropped (Switch-style), tracked by an aux
+load-balance loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _group(x: jax.Array, group_size: int) -> jax.Array:
+    """(B, S, d) -> (G, Sg, d) with G*Sg == B*S."""
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, t // group_size)
+    return x.reshape(g, t // g, d)
+
+
+def moe_ffn(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, group_size: int = 1024,
+            act: str = "swiglu", renormalize: bool = True):
+    """Top-k routed MoE MLP.
+
+    p: {"router": (d, E), "w_gate": (E, d, f), "w_up": (E, d, f),
+        "w_down": (E, f, d)}
+    x: (B, S, d). Returns (out (B, S, d), aux_loss scalar fp32).
+    """
+    b, s, d = x.shape
+    xg = _group(x, group_size)                       # (G, Sg, d)
+    g, sg, _ = xg.shape
+    e = n_experts
+    cap = max(top_k, int(round(top_k * sg * capacity_factor / e)))
+
+    # --- Router (fp32) ---
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)          # (G, Sg, E)
+    top_p, top_e = jax.lax.top_k(probs, top_k)       # (G, Sg, K)
+    if renormalize:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # --- Aux load-balance loss (Switch): E * mean(frac_tokens * frac_probs) ---
+    sel_onehot = jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32)
+    frac_tokens = sel_onehot.mean(axis=(0, 1))
+    frac_probs = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # --- Capacity assignment: position of each (token, k) slot in its expert
+    # queue, computed per group with a cumsum over the flattened (Sg*K) slots.
+    slot_e = top_e.reshape(g, sg * top_k)            # (G, SgK)
+    slot_oh = jax.nn.one_hot(slot_e, e, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(slot_oh, axis=1) * slot_oh - 1  # (G, SgK, E)
+    pos = pos_in_e.max(axis=-1)                      # (G, SgK) position in queue
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0)
+
+    # One-hot dispatch/combine tensors, (G, Sg, K, E, C) folded to (G, Sg, E, C).
+    oh_e = jax.nn.one_hot(slot_e, e, dtype=xg.dtype)            # (G, SgK, E)
+    oh_c = jax.nn.one_hot(pos, cap, dtype=xg.dtype)             # (G, SgK, C)
+    oh_c = oh_c * keep[..., None].astype(xg.dtype)
+    disp_k = jnp.einsum("gte,gtc->gtec", oh_e, oh_c)            # (G, SgK, E, C)
+    disp_k = disp_k.reshape(g, sg, top_k, e, cap)
+    dispatch = disp_k.sum(axis=2)                                # (G, Sg, E, C)
+    combine = jnp.einsum("gskec,gsk->gsec", disp_k,
+                         top_p.astype(xg.dtype))                 # (G, Sg, E, C)
+
+    # --- Expert computation (E sharded over "model") ---
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)              # (G, E, C, d)
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * \
+            jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_up"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])            # (G, E, C, d)
+
+    # --- Combine (contraction over E,C => all-reduce over "model") ---
+    out = jnp.einsum("gsec,gecd->gsd", combine, ye)              # (G, Sg, d)
+    return out.reshape(b, s, d), aux

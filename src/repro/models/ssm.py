@@ -1,0 +1,217 @@
+"""Mamba-1 selective state-space block (as used in Jamba, arXiv:2403.19887).
+
+TPU-native adaptation (DESIGN.md §2): the CUDA "selective scan" kernel is a
+sequential HBM-resident recurrence; on TPU we use a *chunkwise two-pass*
+scheme so the sequential depth is 2*L + T/L instead of T, and every step is
+a wide VPU-friendly elementwise op over (B, n_chunks, d_inner, N):
+
+  pass 1: within-chunk scan (vectorized over chunks, h0=0) -> per-chunk
+          local final states + cumulative decay products
+  bridge: tiny scan over chunks stitches true chunk-initial states
+  pass 2: within-chunk re-scan with true initial states, emitting
+          y_t = C_t . h_t (the (T, d_inner, N) state tensor is never stored).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, cache: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, T, C), w: (K, C).
+
+    If cache (B, K-1, C) is given (decode), it is prepended; the updated
+    cache (last K-1 raw inputs) is always returned.
+    """
+    k = w.shape[0]
+    if cache is not None:
+        xx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    else:
+        xx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    new_cache = xx[:, -(k - 1):, :] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+    out = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out, new_cache
+
+
+def _ssm_scan_chunked(a_in, u_b, c_mat, h0, chunk: int):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + u_t, y_t = C_t . h_t.
+
+    a_in: (B, T, D, N) decay in (0,1]; u_b: (B, T, D, N) input;
+    c_mat: (B, T, N); h0: (B, D, N). Returns y (B, T, D), h_T (B, D, N).
+    """
+    b, t, d, n = a_in.shape
+    chunk = min(chunk, t)
+    if t % chunk:
+        # Pad with identity steps (a=1, u=0): h is unchanged through padding,
+        # so the final state stays exact; padded y rows are sliced off.
+        tp = ((t + chunk - 1) // chunk) * chunk
+        a_p = jnp.pad(a_in, [(0, 0), (0, tp - t), (0, 0), (0, 0)],
+                      constant_values=1.0)
+        u_p = jnp.pad(u_b, [(0, 0), (0, tp - t), (0, 0), (0, 0)])
+        c_p = jnp.pad(c_mat, [(0, 0), (0, tp - t), (0, 0)])
+        y, h_final = _ssm_scan_chunked(a_p, u_p, c_p, h0, chunk)
+        return y[:, :t], h_final
+    nc = t // chunk
+
+    def to_steps(x):  # (B, T, ...) -> (L, B, nc, ...)
+        return jnp.moveaxis(x.reshape(b, nc, chunk, *x.shape[2:]), 2, 0)
+
+    a_s, u_s, c_s = to_steps(a_in), to_steps(u_b), to_steps(c_mat)
+
+    # Pass 1: local states with h=0 at chunk start + cumulative decay.
+    def p1(carry, xs):
+        h, pr = carry
+        a_t, u_t = xs
+        return (a_t * h + u_t, pr * a_t), None
+
+    h_loc0 = jnp.zeros((b, nc, d, n), jnp.float32)
+    pr0 = jnp.ones((b, nc, d, n), jnp.float32)
+    (h_loc, pr), _ = jax.lax.scan(p1, (h_loc0, pr0), (a_s, u_s))
+
+    # Bridge: true state entering each chunk.
+    def p2(h, xs):
+        pr_c, hl_c = xs
+        return pr_c * h + hl_c, h          # emit state *entering* this chunk
+
+    h_final, h_init = jax.lax.scan(
+        p2, h0.astype(jnp.float32),
+        (jnp.moveaxis(pr, 1, 0), jnp.moveaxis(h_loc, 1, 0)))
+    h_init = jnp.moveaxis(h_init, 0, 1)    # (B, nc, D, N)
+
+    # Pass 2: re-scan with true initial states, emit y only.
+    def p3(h, xs):
+        a_t, u_t, c_t = xs
+        h = a_t * h + u_t
+        return h, jnp.einsum("bgdn,bgn->bgd", h, c_t)
+
+    _, y_s = jax.lax.scan(p3, h_init, (a_s, u_s, c_s))
+    y = jnp.moveaxis(y_s, 0, 2).reshape(b, t, d)      # (L,B,nc,D)->(B,T,D)
+    return y, h_final
+
+
+def _ssm_scan_chunked_fused(dt, b_mat, c_mat, xif, a, h0, chunk: int):
+    """Like _ssm_scan_chunked, but the decay a_t = exp(dt_t * A) and input
+    u_t = dt_t * x_t * B_t are computed INSIDE the scan steps from the
+    (B, T, d)-sized streams — the (B, T, d_inner, N) tensors never hit HBM
+    (§Perf iteration: cuts the mamba layer's memory term ~2x).
+
+    dt, xif: (B, T, D); b_mat, c_mat: (B, T, N); a: (D, N); h0: (B, D, N).
+    """
+    b, t, d = dt.shape
+    n = a.shape[1]
+    chunk = min(chunk, t)
+    if t % chunk:
+        tp_len = ((t + chunk - 1) // chunk) * chunk
+        pad2 = [(0, 0), (0, tp_len - t), (0, 0)]
+        # dt=0 -> a_bar=1, u=0: identity steps
+        y, h_final = _ssm_scan_chunked_fused(
+            jnp.pad(dt, pad2), jnp.pad(b_mat, pad2), jnp.pad(c_mat, pad2),
+            jnp.pad(xif, pad2), a, h0, chunk)
+        return y[:, :t], h_final
+    nc = t // chunk
+
+    def to_steps(z):  # (B, T, ...) -> (L, B, nc, ...)
+        return jnp.moveaxis(z.reshape(b, nc, chunk, *z.shape[2:]), 2, 0)
+
+    dt_s, b_s, c_s, x_s = (to_steps(z) for z in (dt, b_mat, c_mat, xif))
+
+    def a_u(dt_t, b_t, x_t):
+        a_t = jnp.exp(dt_t[..., None] * a)             # (B, nc, D, N)
+        u_t = (dt_t * x_t)[..., None] * b_t[:, :, None, :]
+        return a_t, u_t
+
+    # jax.checkpoint on the step bodies: backward recomputes the cheap
+    # decay/input math instead of saving (B, nc, D, N) residuals per step
+    # (without it the fused form is a net memory LOSS — see EXPERIMENTS.md
+    # §Perf H3 iteration log).
+    @jax.checkpoint
+    def p1(carry, xs):
+        h, pr = carry
+        dt_t, b_t, x_t = xs
+        a_t, u_t = a_u(dt_t, b_t, x_t)
+        return (a_t * h + u_t, pr * a_t), None
+
+    h_loc0 = jnp.zeros((b, nc, d, n), jnp.float32)
+    pr0 = jnp.ones((b, nc, d, n), jnp.float32)
+    (h_loc, pr), _ = jax.lax.scan(p1, (h_loc0, pr0), (dt_s, b_s, x_s))
+
+    def p2(h, xs):
+        pr_c, hl_c = xs
+        return pr_c * h + hl_c, h
+
+    h_final, h_init = jax.lax.scan(
+        p2, h0.astype(jnp.float32),
+        (jnp.moveaxis(pr, 1, 0), jnp.moveaxis(h_loc, 1, 0)))
+    h_init = jnp.moveaxis(h_init, 0, 1)
+
+    @jax.checkpoint
+    def p3(h, xs):
+        dt_t, b_t, c_t, x_t = xs
+        a_t, u_t = a_u(dt_t, b_t, x_t)
+        h = a_t * h + u_t
+        return h, jnp.einsum("bgdn,bgn->bgd", h, c_t)
+
+    _, y_s = jax.lax.scan(p3, h_init, (dt_s, b_s, c_s, x_s))
+    y = jnp.moveaxis(y_s, 0, 2).reshape(b, t, d)
+    return y, h_final
+
+
+def mamba_mixer(p: dict, x: jax.Array, *, d_state: int, conv_dim: int,
+                chunk: int = 128, state: dict | None = None,
+                want_state: bool = False, fuse: bool = True):
+    """Mamba-1 mixer. x: (B, T, d_model) (already pre-normed).
+
+    p: in_x/in_z (d, di), conv_w (K, di), conv_b (di,), x_dbc (di, R+2N),
+       dt_w (R, di), dt_b (di,), a_log (di, N), d_skip (di,), out_proj (di, d).
+    state (decode): {"h": (B, di, N) f32, "conv": (B, K-1, di)} or None.
+    Returns (y (B, T, d), new_state | None).
+    """
+    b, t, _ = x.shape
+    di = p["conv_w"].shape[1]
+    dt_rank = p["dt_w"].shape[0]
+
+    z = x @ p["in_z"]
+    xi_raw = x @ p["in_x"]                            # (B, T, di)
+    conv_cache = state["conv"] if state is not None else None
+    xi, new_conv = causal_conv1d(xi_raw, p["conv_w"], conv_cache)
+    xi = jax.nn.silu(xi + p["conv_b"])
+
+    dbc = xi @ p["x_dbc"]                             # (B, T, R+2N)
+    dt_low = dbc[..., :dt_rank]
+    b_mat = dbc[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    c_mat = dbc[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_low @ p["dt_w"] + p["dt_b"]).astype(jnp.float32)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))      # (di, N), negative
+    xif = xi.astype(jnp.float32)
+
+    if state is None:
+        h0 = jnp.zeros((b, di, d_state), jnp.float32)
+        if fuse:
+            y, h_t = _ssm_scan_chunked_fused(dt, b_mat, c_mat, xif, a,
+                                             h0, chunk)
+        else:
+            a_bar = jnp.exp(dt[..., None] * a)        # (B, T, di, N) in HBM
+            u = (dt * xif)[..., None] * b_mat[..., None, :]
+            y, h_t = _ssm_scan_chunked(a_bar, u, c_mat, h0, chunk)
+    else:
+        a_bar = jnp.exp(dt[..., None] * a)            # (B, T=1.., di, N)
+        u = (dt * xif)[..., None] * b_mat[..., None, :]
+        def step(h, xs):
+            a_t, u_t, c_t = xs
+            h = a_t * h + u_t
+            return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+        h_t, y_s = jax.lax.scan(
+            step, state["h"].astype(jnp.float32),
+            (jnp.moveaxis(a_bar, 1, 0), jnp.moveaxis(u, 1, 0),
+             jnp.moveaxis(c_mat, 1, 0)))
+        y = jnp.moveaxis(y_s, 0, 1)
+
+    y = y + xif * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = {"h": h_t, "conv": new_conv} if want_state else None
+    return out, new_state

@@ -1,0 +1,247 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory with recurrent gate mixing), both with stabilized exponential gating.
+
+TPU-native adaptation (DESIGN.md §2):
+
+* mLSTM trains/prefills **chunkwise-parallel**: within a chunk the linear
+  recurrence is evaluated as a decay-masked attention matmul (MXU-friendly,
+  no per-step (Dh,Dh) state materialization — the sequential form would
+  store T x (Dh,Dh) residuals for backward, ~38 GB/layer at 4k); across
+  chunks a short scan carries (C, n, m). Decode uses the exact sequential
+  step. ``mlstm_sequential`` is kept as the correctness oracle.
+
+* sLSTM is inherently sequential (nonlinear recurrent mixing) — the
+  framework's designated *loop-carried-dependency* (LCD) workload, the TPU
+  analogue of the paper's latency-bound Gauss-Seidel case study. The time
+  scan is chunk-checkpointed (outer scan over chunks, rematted inner scan)
+  so backward stores only chunk-boundary carries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _heads(x, h):
+    b, t, d = x.shape
+    return x.reshape(b, t, h, d // h)
+
+
+def _gates(p, x):
+    g = (jnp.einsum("btd,dgh->btgh", x, p["w_if"]) +
+         p["b_if"]).astype(jnp.float32)                  # (B,T,2,H)
+    return g[..., 0, :], jax.nn.log_sigmoid(g[..., 1, :])  # log_i, log_f
+
+
+def _qkv(p, x, h):
+    dh = x.shape[-1] // h
+    q = _heads(x @ p["wq"], h)
+    k = _heads(x @ p["wk"], h) * (dh ** -0.5)
+    v = _heads(x @ p["wv"], h)
+    return q, k, v
+
+
+def _zero_state(b, h, dh):
+    return (jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.full((b, h), NEG, jnp.float32))
+
+
+def mlstm_chunkwise(p: dict, x: jax.Array, *, n_heads: int, chunk: int = 64,
+                    state0=None, want_state: bool = False):
+    """Chunkwise-parallel stabilized mLSTM. x: (B, T, di)."""
+    b, t, di = x.shape
+    h = n_heads
+    dh = di // h
+    chunk = min(chunk, t)
+    q, k, v = _qkv(p, x, h)
+    log_i, log_f = _gates(p, x)                           # (B,T,H)
+    tp = ((t + chunk - 1) // chunk) * chunk
+    if tp != t:
+        # Pad with state-invariant steps: i -> 0 (log NEG), f -> 1 (log 0).
+        padt = [(0, 0), (0, tp - t)]
+        q, k, v = (jnp.pad(a, padt + [(0, 0), (0, 0)]) for a in (q, k, v))
+        log_i = jnp.pad(log_i, padt + [(0, 0)], constant_values=NEG)
+        log_f = jnp.pad(log_f, padt + [(0, 0)], constant_values=0.0)
+    t_orig, t = t, tp
+    nc = t // chunk
+
+    def ck(a):  # (B,T,...) -> (nc, B, L, ...)
+        return jnp.moveaxis(a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    qs, ks, vs = ck(q), ck(k), ck(v)
+    lis, lfs = ck(log_i), ck(log_f)
+
+    if state0 is None:
+        state0 = _zero_state(b, h, dh)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        c0, n0, m0 = carry
+        q_c, k_c, v_c, li_c, lf_c = xs                    # (B,L,H,*) / (B,L,H)
+        f_cum = jnp.cumsum(lf_c, axis=1)                  # F_t, (B,L,H)
+        # a[t,s] = F_t - F_s + logi_s  (valid s<=t)
+        a = (f_cum[:, :, None, :] - f_cum[:, None, :, :] +
+             li_c[:, None, :, :])                         # (B,T_q,T_s,H)
+        a = jnp.where(causal[None, :, :, None], a, NEG)
+        inter = f_cum + m0[:, None, :]                    # (B,L,H)
+        m_t = jnp.maximum(a.max(axis=2), inter)           # (B,L,H)
+        d_mat = jnp.exp(a - m_t[:, :, None, :])           # (B,L,L,H)
+        w_inter = jnp.exp(inter - m_t)                    # (B,L,H)
+
+        qf = q_c.astype(jnp.float32)
+        kf = k_c.astype(jnp.float32)
+        vf = v_c.astype(jnp.float32)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * d_mat
+        num = jnp.einsum("btsh,bshd->bthd", scores, vf) + \
+            w_inter[..., None] * jnp.einsum("bthd,bhde->bthe", qf,
+                                            jnp.swapaxes(c0, -1, -2))
+        den = scores.sum(axis=2) + \
+            w_inter * jnp.einsum("bthd,bhd->bth", qf, n0)
+        y_c = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # chunk-end state
+        f_last = f_cum[:, -1]                             # (B,H)
+        g = f_last[:, None, :] - f_cum + li_c             # (B,L,H) decay to end
+        m_new = jnp.maximum(f_last + m0, g.max(axis=1))
+        w_old = jnp.exp(f_last + m0 - m_new)
+        w_in = jnp.exp(g - m_new[:, None, :])             # (B,L,H)
+        c_new = w_old[..., None, None] * c0 + jnp.einsum(
+            "bshd,bshe->bhde", w_in[..., None] * vf, kf)
+        n_new = w_old[..., None] * n0 + jnp.einsum(
+            "bsh,bshd->bhd", w_in, kf)
+        return (c_new, n_new, m_new), y_c
+
+    (c, n, m), y_s = jax.lax.scan(body, state0, (qs, ks, vs, lis, lfs))
+    y = jnp.moveaxis(y_s, 0, 1).reshape(b, t, di).astype(x.dtype)[:, :t_orig]
+    return y, ((c, n, m) if want_state else None)
+
+
+def mlstm_sequential(p: dict, x: jax.Array, *, n_heads: int,
+                     state0=None, want_state: bool = False):
+    """Exact per-step recurrence (decode path + chunkwise oracle)."""
+    b, t, di = x.shape
+    h = n_heads
+    dh = di // h
+    q, k, v = _qkv(p, x, h)
+    log_i, log_f = _gates(p, x)
+    c0, n0, m0 = state0 if state0 is not None else _zero_state(b, h, dh)
+
+    def step(carry, xs):
+        c, n, m = carry
+        q_t, k_t, v_t, li_t, lf_t = xs
+        m_new = jnp.maximum(lf_t + m, li_t)
+        i_p = jnp.exp(li_t - m_new)
+        f_p = jnp.exp(lf_t + m - m_new)
+        kf = k_t.astype(jnp.float32)
+        vf = v_t.astype(jnp.float32)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+            vf[..., :, None] * kf[..., None, :])
+        n = f_p[..., None] * n + i_p[..., None] * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", c, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                          jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), num / den
+
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    (c, n, m), y_s = jax.lax.scan(
+        step, (c0, n0, m0), (tm(q), tm(k), tm(v), tm(log_i), tm(log_f)))
+    y = jnp.moveaxis(y_s, 0, 1).reshape(b, t, di).astype(x.dtype)
+    return y, ((c, n, m) if want_state else None)
+
+
+def mlstm_mixer(p: dict, x: jax.Array, *, n_heads: int, chunk: int = 64,
+                state: dict | None = None, want_state: bool = False):
+    """Dispatch: chunkwise for train/prefill, sequential for decode."""
+    st0 = (state["c"], state["n"], state["m"]) if state is not None else None
+    if x.shape[1] > 1 or state is None:
+        y, st = mlstm_chunkwise(p, x, n_heads=n_heads, chunk=chunk,
+                                state0=st0, want_state=want_state)
+    else:
+        y, st = mlstm_sequential(p, x, n_heads=n_heads, state0=st0,
+                                 want_state=want_state)
+    new_state = ({"c": st[0], "n": st[1], "m": st[2]}
+                 if (want_state and st is not None) else None)
+    return y @ p["out"], new_state
+
+
+def slstm_mixer(p: dict, x: jax.Array, *, n_heads: int, chunk: int = 128,
+                state: dict | None = None, want_state: bool = False):
+    """sLSTM: scalar memory, head-block-diagonal recurrent weights.
+
+    p: w (d, 4, d), b (4, d), r (H, Dh, 4, Dh), out (d, d).
+    Gate order: [i, f, z, o]. Chunk-checkpointed time scan; non-multiple
+    lengths are padded with masked (state-invariant) steps.
+    """
+    b, t, d = x.shape
+    h = n_heads
+    chunk = min(chunk, t)
+    tp = ((t + chunk - 1) // chunk) * chunk
+    valid = jnp.arange(tp) < t
+    if tp != t:
+        x = jnp.pad(x, ((0, 0), (0, tp - t), (0, 0)))
+    nc = tp // chunk
+
+    if state is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        h0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, h), NEG, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+
+    xs_chunks = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    valid_chunks = valid.reshape(nc, chunk)
+
+    @jax.checkpoint
+    def chunk_body(carry, xs):
+        return _slstm_chunk(p, xs[0], carry, n_heads=n_heads, valid=xs[1])
+
+    (c, n, hh, m), y_s = jax.lax.scan(chunk_body, (c0, n0, h0, m0),
+                                      (xs_chunks, valid_chunks))
+    # y_s: (nc, L, B, d) — inner scan stacks time, outer stacks chunks.
+    y = jnp.moveaxis(y_s, 2, 0).reshape(b, tp, d).astype(x.dtype)[:, :t]
+    new_state = ({"c": c, "n": n, "h": hh, "m": m} if want_state else None)
+    return y @ p["out"], new_state
+
+
+def _slstm_chunk(p, x_c, carry, *, n_heads, valid=None):
+    """One chunk of the sLSTM recurrence. x_c: (B, L, d)."""
+    b, l, d = x_c.shape
+    h = n_heads
+    dh = d // h
+    wx = (jnp.einsum("btd,dge->btge", x_c, p["w"]) +
+          p["b"]).astype(jnp.float32)                     # (B,L,4,d)
+    r = p["r"].astype(jnp.float32)
+    if valid is None:
+        valid = jnp.ones((l,), bool)
+
+    def step(carry, xs):
+        wx_t, ok = xs
+        c, n, h_prev, m = carry
+        hp = h_prev.reshape(b, h, dh)
+        rec = jnp.einsum("bhd,hdge->bghe", hp, r)         # (B,4,H,Dh)
+        g = wx_t + rec.reshape(b, 4, d)
+        li = g[:, 0].reshape(b, h, dh)
+        lf = jax.nn.log_sigmoid(g[:, 1]).reshape(b, h, dh)
+        z = jnp.tanh(g[:, 2])
+        o = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum((lf + m[..., None]).max(-1), li.max(-1))
+        i_p = jnp.exp(li - m_new[..., None]).reshape(b, d)
+        f_p = jnp.exp(lf + m[..., None] - m_new[..., None]).reshape(b, d)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+        # padded steps leave the state untouched
+        c_new = jnp.where(ok, c_new, c)
+        n_new = jnp.where(ok, n_new, n)
+        h_new = jnp.where(ok, h_new, h_prev)
+        m_new = jnp.where(ok, m_new, m)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    return jax.lax.scan(step, carry, (jnp.moveaxis(wx, 1, 0), valid))

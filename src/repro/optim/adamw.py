@@ -1,0 +1,110 @@
+"""Sharded AdamW with fp32 moments over bf16 params, global-norm clipping,
+and warmup-cosine schedule. States inherit the parameter sharding specs
+(same tree structure), so FSDP sharding extends to the optimizer for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # "int8": blockwise-quantized moments (8-bit-Adam family) — cuts the
+    # optimizer-state HBM residency 4x; scales stored per row (last-dim
+    # blocks) so sharding specs derive from the parameter spec.
+    moments_dtype: str = "float32"
+
+
+def _row_quant(x: jax.Array):
+    """Rowwise symmetric int8: scale over the last axis."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _row_dequant(q, s):
+    return q.astype(jnp.float32) * s
+
+
+def lr_schedule(oc: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = oc.lr * (step + 1.0) / max(1, oc.warmup_steps)
+    t = jnp.clip((step - oc.warmup_steps) /
+                 max(1, oc.total_steps - oc.warmup_steps), 0.0, 1.0)
+    cos = oc.lr * (oc.min_lr_frac + (1 - oc.min_lr_frac) *
+                   0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, moments_dtype: str = "float32"):
+    if moments_dtype == "int8":
+        def z8(p):
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.zeros(p.shape[:-1] + (1,) if p.ndim else (1,),
+                                   jnp.float32)}
+        return {"m": jax.tree.map(z8, params),
+                "v": jax.tree.map(z8, params)}
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params)}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(oc: OptConfig, params, grads, opt_state, step):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+    lr = lr_schedule(oc, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - oc.b1 ** t
+    bc2 = 1.0 - oc.b2 ** t
+    q8 = oc.moments_dtype == "int8"
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = _row_dequant(m["q"], m["s"]) if q8 else m
+        v32 = _row_dequant(v["q"], v["s"]) if q8 else v
+        m_new = oc.b1 * m32 + (1 - oc.b1) * g32
+        v_new = oc.b2 * v32 + (1 - oc.b2) * jnp.square(g32)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        if q8:
+            mq, ms = _row_quant(m_new)
+            vq, vs = _row_quant(v_new)
+            return (p_new.astype(p.dtype), {"q": mq, "s": ms},
+                    {"q": vq, "s": vs})
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    is_m = (lambda x: isinstance(x, dict) and set(x) == {"q", "s"}) if q8 \
+        else None
+    flat_m = jax.tree.leaves(opt_state["m"], is_leaf=is_m)
+    flat_v = jax.tree.leaves(opt_state["v"], is_leaf=is_m)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

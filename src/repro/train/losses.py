@@ -1,0 +1,23 @@
+"""Losses: token cross-entropy (fp32, vocab-shard friendly) + MoE aux."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None):
+    """Mean token CE. logits (B,S,V) any float dtype; targets (B,S) int32.
+
+    logsumexp/gather in fp32; reductions over the (possibly model-sharded)
+    vocab dim lower to SPMD psums.
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,64 @@
+"""Serving steps: prefill (build cache, emit last-token logits only) and
+single-token decode against a donated, possibly sequence-sharded KV cache.
+
+Cache donation is the framework's "non-temporal store" analogue (DESIGN.md
+§2): without it every decode step would copy the whole multi-GB cache
+(a write-allocate at system scale); with donation the dynamic-update-slice
+happens in place.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import model as M
+from repro.train.step import model_inputs
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, aux, cache = M.forward(cfg, params, model_inputs(cfg, batch),
+                                       mode="prefill")
+        return logits, cache
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, cache, batch, pos):
+        logits, aux, new_cache = M.forward(
+            cfg, params, model_inputs(cfg, batch), mode="decode",
+            cache=cache, pos=pos)
+        return logits[:, 0], new_cache
+    return decode
+
+
+def make_decode_loop_step(cfg: ModelConfig, n_tokens: int):
+    """Multi-token in-graph greedy decode (§Perf iteration for the
+    collective-bound serve cells): the per-layer FSDP weight all-gather is
+    loop-invariant, so XLA hoists it out of the token scan — one gather
+    per n_tokens instead of per token. Token-id models only."""
+    assert cfg.embed_inputs, "loop decode needs a token embedding"
+
+    def step(params, cache, batch, pos):
+        def body(carry, t):
+            cache, tok = carry
+            logits, _, cache = M.forward(cfg, params, {"tokens": tok},
+                                         mode="decode", cache=cache,
+                                         pos=pos + t)
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+            return (cache, nxt), nxt[:, 0]
+
+        (cache, _), toks = jax.lax.scan(
+            body, (cache, batch["tokens"]),
+            jnp.arange(n_tokens, dtype=jnp.int32))
+        return jnp.swapaxes(toks, 0, 1), cache
+
+    return step
+
+
+def serve_uses_fsdp(cfg: ModelConfig, tp: int = 16,
+                    hbm_budget: float = 10e9) -> bool:
+    """Pure-TP weights only when they fit a chip's HBM with headroom."""
+    return cfg.param_count() * 2 / tp > hbm_budget

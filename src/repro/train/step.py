@@ -1,0 +1,175 @@
+"""Train-step builder: loss → grads (with microbatch accumulation) → AdamW.
+
+The returned step function is pure and pjit-ready: state and batch carry
+NamedShardings derived from the logical-axis rule tables, gradients inherit
+parameter shardings (GSPMD inserts the reduce-scatter/all-gather schedule),
+and the whole state is donated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import model as M
+from repro.optim.adamw import OptConfig, adamw_update, init_opt_state
+from repro.train.losses import cross_entropy
+from repro.utils.sharding import (TRAIN_RULES, mesh_axis_sizes, spec_for,
+                                  use_mesh_rules)
+
+AUX_COEF = 0.01
+
+
+def model_inputs(cfg: ModelConfig, batch: dict) -> dict:
+    keys = ("tokens", "embeds", "positions")
+    return {k: batch[k] for k in keys if k in batch}
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        logits, aux = M.forward(cfg, params, model_inputs(cfg, batch),
+                                mode="train")
+        ce = cross_entropy(logits, batch["targets"])
+        loss = ce + AUX_COEF * aux
+        return loss, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, accum_steps: int = 1):
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+        if accum_steps == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, parts), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + parts["aux"]), None
+
+            def split(x):
+                return x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                 *x.shape[1:])
+
+            mbs = jax.tree.map(
+                lambda x: split(x) if x.ndim >= 2 and
+                x.shape[0] % accum_steps == 0 else
+                jnp.broadcast_to(x, (accum_steps,) + x.shape), batch)
+            # mrope positions (3, B, S): microbatch along axis 1
+            if "positions" in batch and batch["positions"].ndim == 3 \
+                    and batch["positions"].shape[0] == 3:
+                p = batch["positions"]
+                mbs["positions"] = jnp.moveaxis(
+                    p.reshape(3, accum_steps, p.shape[1] // accum_steps,
+                              p.shape[2]), 1, 0)
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                              params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), mbs)
+            loss = loss / accum_steps
+            parts = {"ce": loss, "aux": aux / accum_steps}
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        new_params, new_opt, om = adamw_update(
+            oc, params, grads, state["opt"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **parts, **om}
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Shapes & shardings for AOT lowering
+# ---------------------------------------------------------------------------
+
+def train_state_shapes(cfg: ModelConfig, oc: OptConfig | None = None) -> dict:
+    ps = M.param_shapes(cfg)
+    if oc is not None and oc.moments_dtype == "int8":
+        def mo(s):
+            return {"q": jax.ShapeDtypeStruct(s.shape, jnp.int8),
+                    "s": jax.ShapeDtypeStruct(s.shape[:-1] + (1,),
+                                              jnp.float32)}
+    else:
+        def mo(s):
+            return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"params": ps,
+            "opt": {"m": jax.tree.map(mo, ps), "v": jax.tree.map(mo, ps)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_train_state(cfg: ModelConfig, key,
+                     oc: OptConfig | None = None) -> dict:
+    params = M.init_params(cfg, key)
+    md = oc.moments_dtype if oc is not None else "float32"
+    return {"params": params, "opt": init_opt_state(params, md),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeSpec, *,
+                 with_targets: bool = True) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        s = 1
+    out = {}
+    if cfg.embed_inputs:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.param_dtype))
+    if cfg.rope_kind == "mrope":
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    if with_targets and shape.kind == "train":
+        out["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shapes: dict, rules: dict,
+                 mesh_sizes: dict) -> dict:
+    def f(name, s):
+        if name == "positions" and len(s.shape) == 3 and s.shape[0] == 3:
+            axes = (None, "batch", None)
+        else:
+            axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        return spec_for(s.shape, axes, rules, mesh_sizes)
+    return {k: f(k, v) for k, v in shapes.items()}
+
+
+def train_state_pspecs(cfg: ModelConfig, rules: dict, mesh_sizes: dict,
+                       oc: OptConfig | None = None) -> dict:
+    pp = M.param_pspecs(cfg, rules, mesh_sizes)
+    from jax.sharding import PartitionSpec as P
+    if oc is not None and oc.moments_dtype == "int8":
+        def mo(spec):
+            entries = tuple(spec)
+            s_spec = P(*(entries[:-1] + (None,))) if entries else P()
+            return {"q": spec, "s": s_spec}
+        mom = jax.tree.map(mo, pp,
+                           is_leaf=lambda x: isinstance(x, P))
+        return {"params": pp, "opt": {"m": mom, "v": mom}, "step": P()}
+    return {"params": pp, "opt": {"m": pp, "v": pp}, "step": P()}
+
+
+def default_accum_steps(cfg: ModelConfig, shape: ShapeSpec,
+                        mesh_sizes: dict, budget_bytes: float = 2.5e9) -> int:
+    """Pick gradient-accumulation steps so the per-device stored scan
+    carries (residual stream per layer under full remat) fit the budget."""
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh_sizes.get(ax, 1)
+    b_loc = max(1, shape.global_batch // dp)
+    carry = b_loc * shape.seq_len * cfg.d_model * 2 * cfg.n_layers
+    accum = 1
+    while carry / accum > budget_bytes and accum < b_loc:
+        accum *= 2
+    return accum

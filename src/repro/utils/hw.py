@@ -1,0 +1,99 @@
+"""Hardware constants for the target TPU fleet and roofline math.
+
+These mirror the paper's Table I ("core features") for our three target
+TPU generations, plus the assignment-mandated v5e numbers used for all
+roofline terms:
+
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    # peak compute
+    bf16_flops: float          # FLOP/s per chip
+    int8_ops: float            # OP/s per chip
+    # memory system
+    hbm_bytes: float           # capacity per chip
+    hbm_bw: float              # bytes/s per chip
+    vmem_bytes: float          # on-chip vector memory
+    # interconnect
+    ici_link_bw: float         # bytes/s per link (one direction)
+    ici_links: int             # links per chip (3D torus: 6; 2D: 4)
+    # core geometry (for the in-core port model)
+    clock_hz: float
+    n_mxu: int                 # 128x128 systolic arrays per core
+    n_vpu: int                 # (8,128) vector ALU lanesets usable per cycle
+    native_tile: tuple = (8, 128)  # HBM/VMEM tile granule (fp32 sublane x lane)
+
+
+# TPU v5e — the assignment's target chip. 197 bf16 TFLOP/s at ~0.94 GHz
+# with 4 MXUs: 4 * 128*128 * 2 flop * clock ≈ 197e12 → clock ≈ 1.5e9 / ...
+# Public spec: 393 int8 TOPS / 197 bf16 TFLOPS, 16 GB HBM2E @ 819 GB/s,
+# 1.6 Tbps ICI x4 links (=50 GB/s/link/dir).
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    bf16_flops=197e12,
+    int8_ops=394e12,
+    hbm_bytes=16e9,
+    hbm_bw=819e9,
+    vmem_bytes=128 * 2**20,
+    ici_link_bw=50e9,
+    ici_links=4,
+    clock_hz=1.5e9,   # modeled: 4 MXU * 128*128*2 * 1.5e9 = 196.6e12
+    n_mxu=4,
+    n_vpu=8,
+)
+
+# TPU v5p — the "Sapphire Rapids" of the comparison: widest compute.
+TPU_V5P = ChipSpec(
+    name="tpu_v5p",
+    bf16_flops=459e12,
+    int8_ops=918e12,
+    hbm_bytes=95e9,
+    hbm_bw=2765e9,
+    vmem_bytes=128 * 2**20,
+    ici_link_bw=100e9,
+    ici_links=6,
+    clock_hz=1.75e9,  # modeled: 8 MXU * 128*128*2 * 1.75e9 ≈ 459e12
+    n_mxu=8,
+    n_vpu=16,
+)
+
+# TPU v4 — previous generation baseline.
+TPU_V4 = ChipSpec(
+    name="tpu_v4",
+    bf16_flops=275e12,
+    int8_ops=275e12,
+    hbm_bytes=32e9,
+    hbm_bw=1228e9,
+    vmem_bytes=128 * 2**20,
+    ici_link_bw=50e9,
+    ici_links=6,
+    clock_hz=1.05e9,  # modeled: 8 MXU * 128*128*2 * 1.05e9 ≈ 275e12
+    n_mxu=8,
+    n_vpu=16,
+)
+
+CHIPS = {c.name: c for c in (TPU_V5E, TPU_V5P, TPU_V4)}
+
+# Assignment-mandated roofline constants (v5e).
+PEAK_FLOPS = TPU_V5E.bf16_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW = TPU_V5E.ici_link_bw
+
+
+def dtype_bytes(dtype_str: str) -> int:
+    return {
+        "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+        "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+        "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+        "float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
+        "int64": 8, "int32": 4, "int16": 2, "int8": 1, "uint8": 1,
+        "bool": 1,
+    }.get(dtype_str, 4)

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# exactly 1 device; only repro.launch.dryrun (a separate process) sets the
+# 512-device placeholder flag.
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings, HealthCheck  # noqa: E402
+
+settings.register_profile(
+    "repro",
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")

@@ -1,0 +1,96 @@
+"""Checkpoint/restart + fault-tolerance machinery."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.launch.faults import (HeartbeatRegistry, RestartManager,
+                                 StragglerDetector, elastic_mesh_shape)
+
+
+def _tree(k=0):
+    return {"a": jnp.arange(12.0).reshape(3, 4) + k,
+            "b": {"c": jnp.ones((5,), jnp.int32) * k}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree(3)
+    ck.save(7, t, block=True)
+    assert ck.all_steps() == [7]
+    step, got = ck.restore_latest(_tree(0))
+    assert step == 7
+    np.testing.assert_array_equal(got["a"], t["a"])
+    np.testing.assert_array_equal(got["b"]["c"], t["b"]["c"])
+
+
+def test_checkpoint_gc_keeps_last(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s), block=True)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1))       # async
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_restart_manager_recovers(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    rm = RestartManager(ck, ckpt_every=2)
+
+    def step_fn(state, step):
+        return {"x": state["x"] + 1}
+
+    state, end = rm.run({"x": jnp.zeros(())}, step_fn, 10,
+                        inject_failure_at=5)
+    assert rm.restarts == 1
+    assert end == 10
+    assert float(state["x"]) == 10.0   # recomputed steps after restore
+
+
+def test_straggler_detector_flags_outlier():
+    d = StragglerDetector(warmup=5, z_thresh=3.0)
+    flagged = []
+    for i in range(30):
+        dt = 0.1 + 0.001 * (i % 3)
+        flagged.append(d.observe(dt))
+    assert not any(flagged)
+    assert d.observe(1.5) is True      # 15x step time
+
+
+def test_heartbeats():
+    h = HeartbeatRegistry(4, miss_budget=2)
+    for host in range(4):
+        h.beat(host, t=100.0)
+    h.beat(0, t=200.0)
+    assert h.sweep(timeout=50.0, now=210.0) == []     # first miss
+    dead = h.sweep(timeout=50.0, now=211.0)
+    assert set(dead) == {1, 2, 3}
+
+
+@given(st.integers(1, 4096))
+def test_elastic_mesh_shape_properties(n):
+    shape = elastic_mesh_shape(n)
+    total = 1
+    for d in shape:
+        assert d >= 1
+        total *= d
+    assert total <= n
+    # model axis is a power-of-two divisor of the per-pod chips
+    assert shape[-1] & (shape[-1] - 1) == 0
+
+
+def test_elastic_prefers_model_width():
+    assert elastic_mesh_shape(256)[-1] == 16
+    assert elastic_mesh_shape(512) == (2, 16, 16)
+    # degraded pod: model axis preserved when divisible
+    assert elastic_mesh_shape(240)[-1] == 16

@@ -1,0 +1,93 @@
+"""Assigned-architecture configs must match the published values exactly."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, shapes_for
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+    "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+    "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 0, 151936),
+    "grok-1-314b": (64, 6144, 48, 8, 0, 131072),
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+}
+
+MOE = {
+    "qwen3-moe-235b-a22b": (128, 8, 1536),
+    "grok-1-314b": (8, 2, 32768),
+    "jamba-v0.1-52b": (16, 2, 14336),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_config(arch):
+    cfg = get_config(arch)
+    exp = EXPECTED[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == exp
+
+
+@pytest.mark.parametrize("arch", sorted(MOE))
+def test_moe_config(arch):
+    cfg = get_config(arch)
+    assert (cfg.n_experts, cfg.experts_per_token, cfg.d_ff_expert) == MOE[arch]
+
+
+def test_layer_plan_jamba():
+    cfg = get_config("jamba-v0.1-52b")
+    plan = cfg.layer_plan()
+    assert len(plan) == 32
+    # HF config: attention at period 8 offset 4, MoE period 2 offset 1
+    for i, blk in enumerate(plan):
+        mixer, ffn = blk.split(":")
+        assert mixer == ("attn" if i % 8 == 4 else "mamba")
+        assert ffn == ("moe" if i % 2 == 1 else "dense")
+
+
+def test_layer_plan_gemma3():
+    plan = get_config("gemma3-4b").layer_plan()
+    assert len(plan) == 34
+    for i, blk in enumerate(plan):
+        mixer = blk.split(":")[0]
+        assert mixer == ("attn" if i % 6 == 5 else "attn_local")
+
+
+def test_shapes_for_long_context():
+    long_ok = {a for a in ARCH_IDS
+               if any(s.name == "long_500k" for s in shapes_for(get_config(a)))}
+    assert long_ok == {"gemma3-4b", "xlstm-125m", "jamba-v0.1-52b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model == 128 and cfg.vocab_size == 512
+    assert cfg.n_layers <= 8
+    full = get_config(arch)
+    # same family/pattern structure
+    assert cfg.family == full.family
+    assert len(cfg.block_pattern) == len(full.block_pattern)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_sane(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected_scale = {
+        "yi-9b": 8.8e9, "gemma3-4b": 4.0e9, "minitron-8b": 8.3e9,
+        "qwen1.5-110b": 111e9, "qwen2-vl-7b": 7.4e9,
+        "qwen3-moe-235b-a22b": 235e9, "grok-1-314b": 314e9,
+        "musicgen-large": 1.5e9, "xlstm-125m": 0.125e9,
+        "jamba-v0.1-52b": 52e9,
+    }[arch]
+    assert 0.55 * expected_scale < n < 1.7 * expected_scale, \
+        f"{arch}: {n/1e9:.2f}B params vs expected ~{expected_scale/1e9:.0f}B"
+    if cfg.n_experts:
+        assert cfg.active_param_count() < n

@@ -1,0 +1,93 @@
+"""Pallas stream kernels vs pure-jnp oracles: shape/dtype sweeps in
+interpret mode (the required per-kernel allclose harness)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.stream import kernels as K
+from repro.kernels.stream import ref as R
+
+SHAPES_2D = [(256, 512), (512, 1024), (64, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_copy_add_triads(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    a, b, c = (_rand(k, shape, dtype) for k in ks)
+    np.testing.assert_allclose(K.copy(a, interpret=True), R.copy(a),
+                               **_tol(dtype))
+    np.testing.assert_allclose(K.add(a, b, interpret=True), R.add(a, b),
+                               **_tol(dtype))
+    np.testing.assert_allclose(K.stream_triad(a, b, 2.5, interpret=True),
+                               R.stream_triad(a, b, 2.5), **_tol(dtype))
+    np.testing.assert_allclose(
+        K.schoenauer_triad(a, b, c, interpret=True),
+        R.schoenauer_triad(a, b, c), **_tol(dtype))
+    np.testing.assert_allclose(K.update(a, 1.5, interpret=True),
+                               R.update(a, 1.5), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+def test_init_full_and_partial(shape):
+    out = K.init_store(shape, 3.5, interpret=True)
+    np.testing.assert_array_equal(out, R.init(shape, 3.5))
+    m, n = shape[0] - 3, shape[1] - 28
+    out2 = K.init_partial((m, n), 2.5, interpret=True)
+    np.testing.assert_array_equal(out2, R.init((m, n), 2.5))
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+def test_sum_reduction(shape):
+    a = _rand(jax.random.PRNGKey(1), shape, jnp.float32)
+    got = K.sum_reduction(a, interpret=True)
+    np.testing.assert_allclose(got, R.sum_reduction(a), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", [65536, 262144])
+def test_pi(n):
+    np.testing.assert_allclose(K.pi_integration(n, interpret=True),
+                               np.pi, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(130, 256), (66, 384), (258, 128)])
+def test_jacobi_2d(shape):
+    u = _rand(jax.random.PRNGKey(2), shape, jnp.float32)
+    np.testing.assert_allclose(K.jacobi_2d5pt(u, interpret=True),
+                               R.jacobi_2d5pt(u), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(18, 32, 128), (10, 16, 256)])
+def test_jacobi_3d(shape):
+    u = _rand(jax.random.PRNGKey(3), shape, jnp.float32)
+    np.testing.assert_allclose(K.jacobi_3d7pt(u, interpret=True),
+                               R.jacobi_3d7pt(u), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape,sweeps", [((20, 128), 1), ((34, 128), 2)])
+def test_gauss_seidel(shape, sweeps):
+    u = _rand(jax.random.PRNGKey(4), shape, jnp.float32)
+    np.testing.assert_allclose(
+        K.gauss_seidel_2d5pt(u, sweeps, interpret=True),
+        R.gauss_seidel_2d5pt(u, sweeps), rtol=1e-5, atol=1e-5)
+
+
+def test_ref_jacobi_variants_consistent():
+    """3d11pt/3d27pt oracles: spot checks on constant fields."""
+    u = jnp.ones((12, 12, 12))
+    np.testing.assert_allclose(R.jacobi_3d11pt(u), jnp.ones((8, 8, 8)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(R.jacobi_3d27pt(u), jnp.ones((10, 10, 10)),
+                               rtol=1e-6)

@@ -1,0 +1,75 @@
+"""Optimizer + gradient-compression tests (incl. hypothesis properties)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.optim import compression as C
+from repro.optim.adamw import (OptConfig, adamw_update, global_norm,
+                               init_opt_state, lr_schedule)
+
+
+def test_adamw_converges_quadratic():
+    oc = OptConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                   weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = init_opt_state(params)
+    step = jnp.zeros((), jnp.int32)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}        # d/dw of w^2
+        params, opt, _ = adamw_update(oc, params, grads, opt, step)
+        step = step + 1
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(oc, jnp.float32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                      # warmup rising
+    assert max(lrs) == pytest.approx(1e-3, rel=0.15)
+    assert lrs[-1] < lrs[50]                    # cosine decay
+    assert lrs[-1] >= oc.lr * oc.min_lr_frac * 0.9
+
+
+def test_grad_clipping_applied():
+    oc = OptConfig(lr=1e-3, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = init_opt_state(params)
+    big = {"w": jnp.full(4, 1e6)}
+    p2, _, m = adamw_update(oc, params, big, opt, jnp.zeros((), jnp.int32))
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 1.0   # update bounded by lr
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 2000),
+                  elements=st.floats(-1e3, 1e3, width=32)))
+def test_quantize_roundtrip_bounded(x):
+    xj = jnp.asarray(x)
+    q, s, n = C.quantize_int8(xj)
+    back = C.dequantize_int8(q, s, n, xj.shape)
+    # blockwise max-scaled int8: error <= scale/2 per element
+    scales = np.repeat(np.asarray(s).ravel(), C.BLOCK)[:x.size]
+    err = np.abs(np.asarray(back) - x)
+    assert np.all(err <= scales / 2 + 1e-6)
+
+
+def test_error_feedback_reinjects():
+    g = {"w": jnp.array([0.3, -0.2, 0.7, 0.01])}
+    d1, r1 = C.compress_tree(g, None)
+    # residual equals quantization error
+    np.testing.assert_allclose(np.asarray(r1["w"]),
+                               np.asarray(g["w"]) - np.asarray(d1["w"]),
+                               rtol=1e-6, atol=1e-6)
+    # two steps with error feedback deliver ~2g in total
+    d2, r2 = C.compress_tree(g, r1)
+    total = np.asarray(d1["w"]) + np.asarray(d2["w"]) + np.asarray(r2["w"])
+    np.testing.assert_allclose(total, 2 * np.asarray(g["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

@@ -1,0 +1,127 @@
+"""Tests for the §Perf optimization features: int8-moment AdamW, fused
+mamba scan, multi-token decode loop, serve-rule variants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.models import ssm
+from repro.optim.adamw import OptConfig, adamw_update, init_opt_state
+from repro.train import step as step_lib
+from repro.train.serve import make_decode_loop_step, make_prefill_step
+from repro.utils.sharding import (SERVE_FSDP_GATHER_RULES, SERVE_FSDP_RULES,
+                                  spec_for)
+
+
+def test_int8_moments_converge_quadratic():
+    oc = OptConfig(lr=0.1, warmup_steps=1, total_steps=300,
+                   weight_decay=0.0, clip_norm=100.0, moments_dtype="int8")
+    params = {"w": jnp.array([[5.0, -3.0, 2.0]])}
+    opt = init_opt_state(params, "int8")
+    step = jnp.zeros((), jnp.int32)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(oc, params, grads, opt, step)
+        step = step + 1
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+
+def test_int8_state_shapes_and_specs():
+    cfg = get_smoke_config("yi-9b")
+    oc = OptConfig(moments_dtype="int8")
+    shapes = step_lib.train_state_shapes(cfg, oc)
+    m = shapes["opt"]["m"]
+    leaf = jax.tree.leaves(m, is_leaf=lambda x: isinstance(x, dict)
+                           and set(x) == {"q", "s"})[0]
+    assert leaf["q"].dtype == jnp.int8
+    assert leaf["s"].dtype == jnp.float32
+    specs = step_lib.train_state_pspecs(
+        cfg, {"embed": ("data",), "mlp": ("model",), "qheads": ("model",),
+              "kvheads": ("model",), "vocab": ("model",), "stack": (),
+              None: ()}, {"data": 2, "model": 2}, oc)
+    s_tree = jax.tree.structure(shapes)
+    from jax.sharding import PartitionSpec as P
+    p_tree = jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P))
+    assert s_tree == p_tree
+
+
+def test_fused_mamba_scan_matches_unfused():
+    b, t, d, n = 2, 40, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, t, d)))
+    bm = jax.random.normal(ks[1], (b, t, n))
+    cm = jax.random.normal(ks[2], (b, t, n))
+    x = jax.random.normal(ks[3], (b, t, d))
+    a = -jnp.exp(jax.random.normal(ks[4], (d, n)))
+    h0 = jnp.zeros((b, d, n))
+    a_bar = jnp.exp(dt[..., None] * a)
+    u = (dt * x)[..., None] * bm[..., None, :]
+    y1, h1 = ssm._ssm_scan_chunked(a_bar, u, cm, h0, 16)
+    y2, h2 = ssm._ssm_scan_chunked_fused(dt, bm, cm, x, a, h0, 16)
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-6)
+
+
+def test_jamba_fused_flag_equivalence():
+    cfg = get_smoke_config("jamba-v0.1-52b")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+    l1, _ = M.forward(cfg, params, {"tokens": toks})
+    cfg2 = dataclasses.replace(cfg, ssm_fuse=False)
+    l2, _ = M.forward(cfg2, params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_loop_matches_stepwise():
+    cfg = get_smoke_config("yi-9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    logits, cache = jax.jit(make_prefill_step(cfg))(params, {"tokens": toks})
+    grow = lambda x: jnp.pad(x, [(0, 0)] * (x.ndim - 3) +
+                             [(0, 6), (0, 0), (0, 0)]) \
+        if x.ndim in (4, 5) and x.shape[-3] == 16 else x
+    cache = jax.tree.map(grow, cache)
+    tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+    loop = jax.jit(make_decode_loop_step(cfg, 6))
+    toks_loop, _ = loop(params, cache, {"tokens": tok0}, jnp.int32(16))
+
+    # stepwise greedy with the plain decode step
+    from repro.train.serve import make_decode_step
+    dec = jax.jit(make_decode_step(cfg))
+    cur = tok0
+    got = []
+    c = cache
+    for i in range(6):
+        lg, c = dec(params, c, {"tokens": cur}, jnp.int32(16 + i))
+        cur = jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+        got.append(cur[:, 0])
+    # loop emits the INPUT token of each step's successor; align: the loop
+    # returns tokens generated after consuming tok0 sequentially
+    np.testing.assert_array_equal(np.asarray(toks_loop),
+                                  np.stack(got, axis=1))
+
+
+def test_serve_rule_variants_differ():
+    sizes = {"data": 16, "model": 16}
+    w = (8192, 64, 128)   # wq
+    gather = spec_for(w, ("embed", "qheads", None),
+                      SERVE_FSDP_GATHER_RULES, sizes)
+    res2d = spec_for(w, ("embed", "qheads", None), SERVE_FSDP_RULES, sizes)
+    assert gather == res2d            # weights sharded identically
+    act = (128, 1, 8192)
+    a_g = spec_for(act, ("act_batch", None, "act_embed"),
+                   SERVE_FSDP_GATHER_RULES, sizes)
+    a_r = spec_for(act, ("act_batch", None, "act_embed"),
+                   SERVE_FSDP_RULES, sizes)
+    assert a_g[0] is not None and a_g[2] is None    # batch-sharded acts
+    assert a_r[0] is None and a_r[2] is not None    # d-sharded acts

@@ -1,0 +1,112 @@
+"""Sharding-rule engine + data-pipeline tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES
+from repro.data.pipeline import SyntheticLM, make_iterator
+from repro.models import model as M
+from repro.utils.sharding import (SERVE_RULES, TRAIN_RULES, spec_for)
+
+MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+MESH_SIZES_SP = {"data": 16, "model": 16}
+
+
+@given(st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 16, 32, 64, 128, 256,
+                                 688, 1536, 4096]),
+                min_size=1, max_size=4),
+       st.lists(st.sampled_from(["embed", "mlp", "qheads", "kvheads",
+                                 "vocab", "expert", None]),
+                min_size=1, max_size=4))
+def test_spec_for_divisibility_and_uniqueness(shape, axes):
+    axes = (axes + [None] * 4)[:len(shape)]
+    spec = spec_for(tuple(shape), tuple(axes), TRAIN_RULES, MESH_SIZES)
+    used = []
+    for dim, part in zip(shape, spec):
+        if part is None:
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        prod = 1
+        for p in parts:
+            assert p not in used, "mesh axis used twice"
+            used.append(p)
+            prod *= MESH_SIZES[p]
+        assert dim % prod == 0, "non-divisible sharding"
+
+
+def test_grok_experts_fall_back_to_ffn_sharding():
+    cfg = get_config("grok-1-314b")
+    specs = M.param_pspecs(cfg, TRAIN_RULES, MESH_SIZES_SP)
+    moe = specs["scan"]["0"]["ffn"]["w_up"]   # (stack, E=8, d, ffe)
+    # 8 experts don't divide model=16 -> expert dim unsharded,
+    # ffe picks up the model axis instead
+    assert moe[1] is None
+    assert moe[3] == "model"
+
+
+def test_qwen3_experts_sharded():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    specs = M.param_pspecs(cfg, TRAIN_RULES, MESH_SIZES_SP)
+    moe = specs["scan"]["0"]["ffn"]["w_up"]   # (stack, E=128, d, ffe)
+    assert moe[1] == "model"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_pspec_tree_matches_shape_tree(arch):
+    cfg = get_config(arch)
+    shapes = M.param_shapes(cfg)
+    specs = M.param_pspecs(cfg, TRAIN_RULES, MESH_SIZES)
+    s_tree = jax.tree.structure(shapes)
+    p_tree = jax.tree.structure(specs, is_leaf=lambda x: x is None or
+                                hasattr(x, "index"))
+    assert s_tree == p_tree
+    # every spec is consistent with its shape
+    for sh, sp in zip(jax.tree.leaves(shapes),
+                      jax.tree.leaves(specs, is_leaf=lambda x: x is None or
+                                      hasattr(x, "index"))):
+        assert len(sp) <= len(sh.shape)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "jamba-v0.1-52b"])
+def test_cache_pspecs_shard_kv_seq(arch):
+    cfg = get_config(arch)
+    specs = M.cache_pspecs(cfg, SERVE_RULES, MESH_SIZES_SP,
+                           batch=128, seq=32768)
+    # attention KV cache: batch over data, seq over model
+    flat = jax.tree.leaves_with_path(
+        specs, is_leaf=lambda x: x is None or hasattr(x, "index"))
+    kv = [s for p, s in flat if "k" == p[-1].key or "v" == p[-1].key]
+    assert kv, "no attention caches found"
+    for s in kv:
+        flat_axes = [a for part in s if part is not None
+                     for a in (part if isinstance(part, tuple) else (part,))]
+        assert "data" in flat_axes     # batch sharded
+        assert "model" in flat_axes    # seq (or heads) sharded over TP
+
+
+def test_synthetic_data_deterministic():
+    src = SyntheticLM(1000, 64, seed=1)
+    b1 = src.batch(5, 4)
+    b2 = src.batch(5, 4)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch(6, 4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_iterator_mrope_and_embeds():
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen2-vl-7b")
+    from repro.configs.base import ShapeSpec
+    it = make_iterator(cfg, ShapeSpec("t", 32, 4, "train"))
+    b = next(it)
+    assert b["positions"].shape == (3, 4, 32)
+    cfg2 = get_smoke_config("musicgen-large")
+    it2 = make_iterator(cfg2, ShapeSpec("t", 32, 4, "train"))
+    b2 = next(it2)
+    assert "embeds" in b2 and b2["embeds"].shape == (4, 32, cfg2.d_model)
