@@ -20,9 +20,14 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.wa import machine_traffic_ratio, store_profile
+from repro.core.machine import get_machine
+from repro.core.wa import store_profile, traffic_ratio_for
 
 N = 1 << 22     # 16 MiB store
+
+# registered machine name -> paper Fig. 4 curve label
+_CURVES = (("neoverse_v2", "grace"), ("golden_cove", "spr"),
+           ("zen4", "genoa"))
 
 
 def _time(fn, *args, reps=5):
@@ -38,20 +43,20 @@ def _time(fn, *args, reps=5):
 
 def main(quick: bool = False):
     lines = []
-    # --- modeled cross-machine curves (paper Fig. 4) ---
+    # --- modeled cross-machine curves (paper Fig. 4): the behavioural
+    # mode now comes from each registered machine's wa_mode tag ---
+    machines = [(get_machine(name), label) for name, label in _CURVES]
     for cores_frac in (0.1, 0.25, 0.5, 0.75, 1.0):
-        g = machine_traffic_ratio("auto_claim", bw_utilization=cores_frac)
-        s = machine_traffic_ratio("saturation_gated",
-                                  bw_utilization=cores_frac)
-        s_nt = machine_traffic_ratio("saturation_gated", nt_stores=True,
-                                     bw_utilization=cores_frac)
-        z = machine_traffic_ratio("explicit_only",
-                                  bw_utilization=cores_frac)
-        z_nt = machine_traffic_ratio("explicit_only", nt_stores=True,
-                                     bw_utilization=cores_frac)
+        parts = []
+        for m, label in machines:
+            r = traffic_ratio_for(m, bw_utilization=cores_frac)
+            parts.append(f"{label}={r:.2f}")
+            if m.wa_mode != "auto_claim":   # NT stores only change those
+                r_nt = traffic_ratio_for(m, nt_stores=True,
+                                         bw_utilization=cores_frac)
+                parts.append(f"{label}_nt={r_nt:.2f}")
         lines.append(f"fig4,model_utilization_{cores_frac:.2f},0,"
-                     f"grace={g:.2f};spr={s:.2f};spr_nt={s_nt:.2f};"
-                     f"genoa={z:.2f};genoa_nt={z_nt:.2f}")
+                     + ";".join(parts))
 
     # --- TPU tile-level RMW (the WA analogue, DESIGN.md §2) ---
     full = store_profile((4096, 4096), "f32")

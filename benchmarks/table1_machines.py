@@ -4,7 +4,7 @@ generations + the measured host envelope (theoretical vs achieved peak)."""
 from __future__ import annotations
 
 from repro.core.ubench import calibrated_host_model, host_peaks, mem_tiers
-from repro.utils.hw import CHIPS
+from repro.utils.hw import CHIPS, CPU_CHIPS
 
 
 def rows():
@@ -33,6 +33,23 @@ def rows():
     return out
 
 
+def cpu_rows():
+    """Paper Table I: the three actual CPUs, per-core FP32 peak."""
+    out = []
+    for c in CPU_CHIPS.values():
+        lanes = c.simd_width_bytes / 4
+        core_gflops = 2 * c.n_fma * lanes * c.clock_hz / 1e9
+        out.append({
+            "machine": c.name,
+            "core_gflops_f32": core_gflops,
+            "socket_tflops_f32": core_gflops * c.cores / 1e3,
+            "mem_gbs": c.mem_bw / 1e9,
+            "clock_ghz": c.clock_hz / 1e9,
+            "cores": c.cores, "wa_mode": c.wa_mode,
+        })
+    return out
+
+
 def main(quick: bool = False):
     lines = []
     for r in rows():
@@ -40,6 +57,13 @@ def main(quick: bool = False):
             f"table1,{r['machine']},0,"
             f"tflops={r['bf16_tflops']:.1f};bw={r['hbm_gbs']:.0f}GB/s;"
             f"ici={r['ici_gbs_per_link']:.0f}GB/s;clock={r['clock_ghz']:.2f}GHz")
+    for r in cpu_rows():
+        lines.append(
+            f"table1,{r['machine']},0,"
+            f"core_gflops={r['core_gflops_f32']:.0f};"
+            f"socket_tflops={r['socket_tflops_f32']:.1f};"
+            f"bw={r['mem_gbs']:.0f}GB/s;clock={r['clock_ghz']:.2f}GHz;"
+            f"cores={r['cores']};wa={r['wa_mode']}")
     tiers = ";".join(f"{int(c) if c != float('inf') else 'inf'}:"
                      f"{b/1e9:.1f}GB/s" for c, b in mem_tiers())
     lines.append(f"table1,host_mem_tiers,0,{tiers}")

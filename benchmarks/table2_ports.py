@@ -1,24 +1,29 @@
-"""Paper Table II analog: in-core features / port models of the machines."""
+"""Paper Table II analog: in-core features / port models of every
+registered machine — the three TPU generations, the paper's three CPUs
+(Zen 4, Golden Cove, Neoverse V2), and the ubench-calibrated host."""
 
 from __future__ import annotations
 
-from repro.core.machine import MACHINES
+from repro.core.machine import registered_models
 from repro.core.ubench import calibrated_host_model
 
 
 def main(quick: bool = False):
     lines = []
-    machines = dict(MACHINES)
-    machines["host_cpu"] = calibrated_host_model()
-    for name, m in machines.items():
-        n_mxu = sum(1 for p in m.ports if p.startswith("MXU"))
-        n_vpu = sum(1 for p in m.ports if p.startswith("VPU"))
+    calibrated_host_model()         # registers `host_cpu`
+    for m in registered_models():
+        n_mxu = len(m.entry("mxu").ports)
+        n_vpu = len(m.entry("vpu").ports)
+        n_ls = len(m.entry("vlsu").ports)
         lines.append(
-            f"table2,{name},0,"
-            f"ports={len(m.ports)};mxu={n_mxu};vpu={n_vpu};"
-            f"simd_bytes={m.simd_width_bytes};"
-            f"mxu_cyc_per_pass={m.table['mxu'].cycles_per_unit:.0f};"
-            f"vpu_lat={m.table['vpu'].latency:.0f}")
+            f"table2,{m.name},0,"
+            f"vendor={m.vendor or 'host'};ports={len(m.ports)};"
+            f"fma_or_mxu={n_mxu};simd_or_vpu={n_vpu};ldst={n_ls};"
+            f"issue_width={m.issue_width};"
+            f"simd_bytes={m.simd_width_bytes};wa_mode={m.wa_mode};"
+            f"mxu_cyc_per_pass={m.entry('mxu').cycles_per_unit:.0f};"
+            f"vdiv_port={m.entry('vdiv').ports[0]};"
+            f"vpu_lat={m.entry('vpu').latency:.0f}")
     return lines
 
 

@@ -19,16 +19,20 @@ CLASSES = ("vpu", "xlu", "vdiv", "vlsu", "gather4", "mxu")
 def main(quick: bool = False):
     lines = []
     for name, m in MACHINES.items():
-        n_vpu = sum(1 for p in m.ports if p.startswith("VPU"))
-        n_mxu = sum(1 for p in m.ports if p.startswith("MXU"))
         for cls in CLASSES:
             e = m.table[cls]
+            # effective port count matches the Analyzer's weighted
+            # occupation: the slowest (highest-weight) port bounds TP
+            if e.port_weights:
+                n_ports = sum(e.port_weights) / max(e.port_weights)
+            else:
+                n_ports = len(e.ports)
             if cls == "mxu":
                 # elements/cy for a dense 128x128x128 pass
-                per_cy = 128 * 128 * n_mxu / e.cycles_per_unit
+                per_cy = 128 * 128 * n_ports / e.cycles_per_unit
             else:
-                ports = n_vpu if cls in ("vpu", "xlu", "vdiv") else 2
-                per_cy = VPU_BLOCK * ports / e.cycles_per_unit / 2  # DP=2xf32
+                per_cy = VPU_BLOCK * n_ports / e.cycles_per_unit / 2  # DP
+
             lines.append(f"table3,{name}.{cls},0,"
                          f"dp_elems_per_cy={per_cy:.1f};lat_cy={e.latency:.0f}")
     rates = measure_host_rates()

@@ -13,7 +13,6 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.machine import MachineModel
-from repro.utils.hw import ChipSpec
 
 
 @dataclasses.dataclass

@@ -23,7 +23,8 @@ from repro.utils.hw import dtype_bytes
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
 _COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
 _INSTR_RE = re.compile(
-    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[\d,]*\](?:\{[^}]*\})?|[a-z][a-z0-9]*\[\])\s*"
+    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\(.*?\)|[a-z][a-z0-9]*\[[\d,]*\](?:\{[^}]*\})?|[a-z][a-z0-9]*\[\])\s*"
     r"([\w\-]+)\((.*)$")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _ATTR_CALL = re.compile(r"(calls|body|condition|to_apply)=%?([\w\.\-]+)")

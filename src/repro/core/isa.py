@@ -12,14 +12,22 @@ import dataclasses
 import math
 import re
 
-from repro.core.hloparse import Instr, Shape
+from repro.core.hloparse import Instr
 
 VPU_BLOCK = 8 * 128      # elements per (8,128) vector register block
+
+# Every machine file must provide an OpEntry for each of these classes —
+# repro.core.machine.register() validates completeness against this tuple.
+# (`gather4`/`sc` have universal fallbacks but all shipped models define
+# them explicitly; `ici` doubles as the cross-socket/C2C class on CPUs.)
+UOP_CLASSES = ("mxu", "vpu", "xlu", "vdiv", "vlsu", "gather4", "sc",
+               "dma", "ici")
 
 XLU_OPS = {
     "exponential", "exponential-minus-one", "log", "log-plus-one",
     "logistic", "tanh", "tan", "sine", "cosine", "rsqrt", "sqrt", "cbrt",
-    "power", "atan2", "erf", "rng", "rng-bit-generator", "rng-get-and-update-state",
+    "power", "atan2", "erf", "rng", "rng-bit-generator",
+    "rng-get-and-update-state",
 }
 DIV_OPS = {"divide", "remainder"}
 CHEAP_EW = {
@@ -126,7 +134,8 @@ def decompose(instr: Instr, shapes_of: dict, n_devices: int = 1) -> Uops:
 
     if op == "convolution":
         # flops from out elems x kernel size (approx); map to MXU passes
-        kb = shapes_of.get(instr.operands[1]) if len(instr.operands) > 1 else None
+        kb = shapes_of.get(instr.operands[1]) \
+            if len(instr.operands) > 1 else None
         ksize = kb.elems if kb is not None else 9
         flops = 2.0 * e * ksize
         passes = max(1.0, flops / (2 * 128 ** 3))

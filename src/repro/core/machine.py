@@ -1,31 +1,43 @@
-"""In-core machine models — the TPU analogue of the paper's Table II.
+"""Cross-vendor machine models — the paper's Table II as machine files.
 
 A :class:`MachineModel` is the OSACA "machine file": a set of ports
 (functional-unit groups visible to the scheduler) plus, per µ-op class,
-which ports may execute it, how many cycles one *unit* of work occupies a
-port, and the result latency (for CP/LCD analysis).
+which ports may execute it, how many cycles one *unit* of work occupies
+the port group, and the result latency (for CP/LCD analysis). Port sets
+may be asymmetric per class (e.g. `vdiv` pinned to one divider pipe) and
+weighted per port (`OpEntry.port_weights`) to express per-port issue
+widths — see DESIGN.md §4.
 
-µ-op classes (units in parentheses):
-  mxu      — one 128x128x128 systolic pass (unit = pass, 128 cy/port)
+µ-op classes (units in parentheses, canonical list in isa.UOP_CLASSES):
+  mxu      — one 128x128x128 matmul pass (TPU: systolic pass; CPU: the
+             FMA-pipe pair executing the equivalent FMA stream)
   vpu      — elementwise vector op (unit = one (8,128) register block)
   xlu      — transcendental (exp/log/tanh/...) — multi-cycle VPU-class
-  vdiv     — vector divide/sqrt (slowest VPU-class, mirrors paper Table III)
-  vlsu     — VMEM load/store/shuffle (unit = (8,128) block moved)
-  sc       — scalar core op (loop bookkeeping, unit = 1 op)
-  dma      — HBM<->VMEM transfer (unit = byte)
-  ici      — inter-chip transfer (unit = byte)
+  vdiv     — vector divide/sqrt (slowest VPU-class, paper Table III)
+  vlsu     — load/store/shuffle (unit = (8,128) block moved)
+  sc       — scalar op (loop bookkeeping, unit = 1 op)
+  dma      — off-core memory transfer (unit = byte; HBM or DDR/LPDDR)
+  ici      — inter-chip/cross-socket transfer (unit = byte)
 
-Three shipped TPU generations mirror the paper's three CPUs; `host_cpu`
-is calibrated at runtime by repro.core.ubench (the paper's
-microbenchmark-driven entries).
+Shipped machines: three TPU generations (spec-derived), the paper's three
+CPUs (`zen4`, `golden_cove`, `neoverse_v2` — Table II ports, Table III
+latencies mapped onto the µ-op classes), and `host_cpu` (calibrated at
+runtime by repro.core.ubench, which registers it here). Each machine is
+tagged with its write-allocate mode so repro.core.wa selects the Fig. 4
+behavioural mode per machine.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 
-from repro.utils.hw import CHIPS, ChipSpec
+from repro.core import isa
+from repro.utils.hw import CHIPS, CPU_CHIPS, ChipSpec, CpuSpec
+
+#: f32 bytes in one vpu/vlsu unit — the (8,128) register block.
+BLOCK_BYTES = 8 * 128 * 4
+#: multiply-accumulates in one mxu unit — a 128x128x128 pass.
+PASS_MACS = 128 ** 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +45,10 @@ class OpEntry:
     ports: tuple          # which ports can execute this µ-op class
     cycles_per_unit: float
     latency: float        # cycles until result usable
+    # relative issue capacity of each admissible port (None = symmetric).
+    # Expresses per-port issue widths: e.g. store pipes that absorb only
+    # the store share of `vlsu` traffic get a smaller weight.
+    port_weights: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +61,10 @@ class MachineModel:
     # paper-style metadata (Table II row)
     simd_width_bytes: int = 0
     notes: str = ""
+    vendor: str = ""
+    isa_name: str = ""
+    issue_width: int = 0          # front-end µops/cycle (0 = unmodeled)
+    wa_mode: str = "auto_claim"   # write-allocate behaviour (core/wa.py)
 
     def entry(self, cls: str) -> OpEntry:
         return self.table[cls]
@@ -52,6 +72,87 @@ class MachineModel:
     def seconds(self, cycles: float) -> float:
         return cycles / self.clock_hz
 
+
+# --- registry ---------------------------------------------------------------
+
+#: name -> MachineModel. Mutated only through register(); kept as a plain
+#: dict under its historical name so existing call sites keep working.
+MACHINES: dict = {}
+
+_WA_MODES = ("auto_claim", "saturation_gated", "explicit_only")
+
+
+class MachineValidationError(ValueError):
+    pass
+
+
+def validate_model(model: MachineModel) -> None:
+    """A machine file must cover every µ-op class with sane numbers."""
+    known = set(model.ports)
+    for cls in isa.UOP_CLASSES:
+        e = model.table.get(cls)
+        if e is None:
+            raise MachineValidationError(
+                f"{model.name}: missing µ-op class {cls!r}")
+        if not e.ports:
+            raise MachineValidationError(
+                f"{model.name}/{cls}: empty port set")
+        if not set(e.ports) <= known:
+            raise MachineValidationError(
+                f"{model.name}/{cls}: ports {set(e.ports) - known} not "
+                f"declared in machine.ports")
+        if not e.cycles_per_unit > 0:
+            raise MachineValidationError(
+                f"{model.name}/{cls}: cycles_per_unit must be > 0")
+        if e.latency < 0:
+            raise MachineValidationError(
+                f"{model.name}/{cls}: negative latency")
+        if e.port_weights is not None:
+            if len(e.port_weights) != len(e.ports):
+                raise MachineValidationError(
+                    f"{model.name}/{cls}: {len(e.port_weights)} weights "
+                    f"for {len(e.ports)} ports")
+            if any(w <= 0 for w in e.port_weights):
+                raise MachineValidationError(
+                    f"{model.name}/{cls}: non-positive port weight")
+    if model.wa_mode not in _WA_MODES:
+        raise MachineValidationError(
+            f"{model.name}: unknown wa_mode {model.wa_mode!r} "
+            f"(expected one of {_WA_MODES})")
+    if not model.clock_hz > 0:
+        raise MachineValidationError(f"{model.name}: clock_hz must be > 0")
+
+
+def register(model: MachineModel, *, replace: bool = False) -> MachineModel:
+    """Validate and add a machine to the registry; returns the model."""
+    validate_model(model)
+    if model.name in MACHINES and not replace:
+        raise ValueError(f"machine {model.name!r} already registered "
+                         f"(pass replace=True to recalibrate)")
+    MACHINES[model.name] = model
+    return model
+
+
+def get_machine(machine) -> MachineModel:
+    """Resolve a machine by name or pass a MachineModel through."""
+    if isinstance(machine, MachineModel):
+        return machine
+    try:
+        return MACHINES[machine]
+    except KeyError:
+        raise KeyError(f"unknown machine {machine!r}; registered: "
+                       f"{sorted(MACHINES)}") from None
+
+
+def registered_names() -> tuple:
+    return tuple(MACHINES)
+
+
+def registered_models() -> tuple:
+    return tuple(MACHINES.values())
+
+
+# --- TPU machine files ------------------------------------------------------
 
 def _tpu_model(chip: ChipSpec, mxu_lat: float = 192.0) -> MachineModel:
     mxus = tuple(f"MXU{i}" for i in range(chip.n_mxu))
@@ -71,22 +172,97 @@ def _tpu_model(chip: ChipSpec, mxu_lat: float = 192.0) -> MachineModel:
         "vlsu": OpEntry(vlsus, 1.0, 6.0),    # (8,128) block load/store
         "gather4": OpEntry(vlsus, 4.0, 12.0),  # random-index gather
         "sc": OpEntry(sc, 1.0, 1.0),
-        "dma": OpEntry(dmas, 2.0 / bytes_per_cy, 500.0),   # per byte, split 2q
+        "dma": OpEntry(dmas, 2.0 / bytes_per_cy, 500.0),   # per byte, 2q
         "ici": OpEntry(icis, 1.0 / ici_bytes_per_cy, 2000.0),
     }
     return MachineModel(
         name=chip.name, clock_hz=chip.clock_hz,
         ports=mxus + vpus + vlsus + dmas + icis + sc, table=table, chip=chip,
-        simd_width_bytes=8 * 128 * 4,
+        simd_width_bytes=BLOCK_BYTES, vendor="Google", isa_name="TPU",
+        issue_width=0, wa_mode="auto_claim",
         notes=f"{chip.n_mxu} MXU / {chip.n_vpu} VPU lanesets, "
               f"{chip.hbm_bw/1e9:.0f} GB/s HBM")
+
+
+# --- CPU machine files (paper Table II / Table III) -------------------------
+
+def _cpu_ports(spec: CpuSpec) -> dict:
+    """Scheduler-visible port groups for one paper CPU."""
+    simd = tuple(f"FP{i}" for i in range(spec.n_simd))
+    loads = tuple(f"LD{i}" for i in range(spec.n_load))
+    stores = tuple(f"ST{i}" for i in range(spec.n_store))
+    return {
+        "fma": simd[:spec.n_fma],   # FMA-capable subset (the mxu pair)
+        "simd": simd,
+        "div": simd[:1],            # divider lives on the first FP pipe
+        "load": loads,
+        "store": stores,
+        "alu": ("ALU",),
+        "mem": ("MEM",),            # off-core memory interface
+        "xs": ("ICI",),             # cross-socket / C2C link
+    }
+
+
+def _cpu_model(spec: CpuSpec) -> MachineModel:
+    """Map a paper CPU onto the µ-op classes.
+
+    Units stay TPU-shaped so one HLO analysis is comparable across
+    vendors: a `vpu` unit is one (8,128) f32 block (4 KiB of lanes), an
+    `mxu` unit is one 128^3 pass. Per class, `cycles_per_unit` is the
+    total port-group occupation of one unit assuming one full-width op
+    per port per cycle — the Table III reciprocal-throughput model.
+    """
+    p = _cpu_ports(spec)
+    # full-width vector ops needed to touch one (8,128) f32 block
+    vec_ops = BLOCK_BYTES / spec.simd_width_bytes
+    # FMAs for one 128^3 pass at simd_width/4 f32 lanes per FMA
+    fma_ops = PASS_MACS / (spec.simd_width_bytes / 4)
+    # loads are ~2 of every 3 accesses in streaming code; store pipes
+    # only absorb the store share -> weight them at half a load pipe
+    ls_weights = (1.0,) * spec.n_load + (0.5,) * spec.n_store
+    cy_per_byte = spec.clock_hz / spec.mem_bw
+    mem_lat_cy = 100e-9 * spec.clock_hz        # ~100 ns DRAM latency
+    table = {
+        "mxu": OpEntry(p["fma"], fma_ops, spec.fma_latency),
+        "vpu": OpEntry(p["simd"], vec_ops, spec.fma_latency),
+        # vectorized transcendental: ~8-term polynomial of FMA-class ops
+        "xlu": OpEntry(p["simd"], 8.0 * vec_ops, 8.0 * spec.fma_latency),
+        # divider: single pipe, barely pipelined (Table III)
+        "vdiv": OpEntry(p["div"], spec.fdiv_recip_tput * vec_ops,
+                        spec.fdiv_latency),
+        "vlsu": OpEntry(p["load"] + p["store"], vec_ops, spec.load_latency,
+                        port_weights=ls_weights),
+        # gathers crack into scalar-ish loads: ~4x block cost, loads only
+        "gather4": OpEntry(p["load"], 4.0 * vec_ops,
+                           2.0 * spec.load_latency),
+        "sc": OpEntry(p["alu"], 1.0, 1.0),
+        "dma": OpEntry(p["mem"], cy_per_byte, mem_lat_cy),
+        "ici": OpEntry(p["xs"], spec.clock_hz / spec.xsocket_bw,
+                       4.0 * mem_lat_cy),
+    }
+    all_ports = (p["simd"] + p["load"] + p["store"] + p["alu"] + p["mem"]
+                 + p["xs"])
+    return MachineModel(
+        name=spec.name, clock_hz=spec.clock_hz, ports=all_ports,
+        table=table, chip=None, simd_width_bytes=spec.simd_width_bytes,
+        vendor=spec.vendor, isa_name=spec.isa,
+        issue_width=spec.issue_width, wa_mode=spec.wa_mode,
+        notes=f"{spec.uarch}: {spec.n_fma}xFMA/{spec.n_simd}xSIMD "
+              f"{spec.simd_width_bytes * 8}b, {spec.n_load}L/{spec.n_store}S, "
+              f"{spec.mem_bw/1e9:.0f} GB/s socket")
 
 
 TPU_V5E = _tpu_model(CHIPS["tpu_v5e"])
 TPU_V5P = _tpu_model(CHIPS["tpu_v5p"])
 TPU_V4 = _tpu_model(CHIPS["tpu_v4"])
 
-MACHINES = {m.name: m for m in (TPU_V5E, TPU_V5P, TPU_V4)}
+ZEN4 = _cpu_model(CPU_CHIPS["zen4"])
+GOLDEN_COVE = _cpu_model(CPU_CHIPS["golden_cove"])
+NEOVERSE_V2 = _cpu_model(CPU_CHIPS["neoverse_v2"])
+
+for _m in (TPU_V5E, TPU_V5P, TPU_V4, ZEN4, GOLDEN_COVE, NEOVERSE_V2):
+    register(_m)
+del _m
 
 
 def host_cpu_model(calib: dict | None = None) -> MachineModel:
@@ -94,13 +270,12 @@ def host_cpu_model(calib: dict | None = None) -> MachineModel:
 
     Units are normalized to a nominal 1 GHz clock so `cycles` == ns; the
     calibration dict maps class -> units/second measured on this host.
+    (repro.core.ubench builds this and registers it as `host_cpu`.)
     """
     clock = 1e9
     default_rates = {           # units/s, conservative one-core defaults
         "mxu": 2.0e7,           # ~84 GFLOP/s f32 matmul
-        "vpu": 1.2e9,           # (8,128)-blocks/s ~ 1.2e12 elem-ops/s? no:
-                                # 1024 elems/block -> ~1.2e12 elem/s is too
-                                # high for 1 core; calibration will fix.
+        "vpu": 1.2e9,           # (8,128)-blocks/s; calibration will fix
         "xlu": 1.5e8,
         "vdiv": 2.0e8,
         "vlsu": 1.0e9,
@@ -116,4 +291,5 @@ def host_cpu_model(calib: dict | None = None) -> MachineModel:
                           clock / rate, 4.0)
              for cls, rate in default_rates.items()}
     return MachineModel(name="host_cpu", clock_hz=clock, ports=ports,
-                        table=table, notes="ubench-calibrated host model")
+                        table=table, wa_mode="auto_claim",
+                        notes="ubench-calibrated host model")

@@ -19,14 +19,17 @@ which under-counts a scanned N-layer model by N x (see DESIGN.md §3.1).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
 
 from repro.core import isa
 from repro.core.hloparse import (Computation, HloModule, Instr,
                                  parse_hlo, trip_counts_from_text,
                                  while_trip_count)
-from repro.core.machine import MachineModel
+from repro.core.machine import (MachineModel, get_machine,
+                                registered_names)
 
 
 _MEM_PORTS = ("DMA", "ICI", "MEM")
@@ -94,14 +97,19 @@ class Report:
 
 
 class Analyzer:
-    def __init__(self, machine: MachineModel, n_devices: int = 1):
-        self.machine = machine
+    """Analyzes one HLO module against one machine model.
+
+    `machine` may be a MachineModel or the name of any registered machine
+    (see repro.core.machine.register).
+    """
+
+    def __init__(self, machine, n_devices: int = 1):
+        self.machine = get_machine(machine)
         self.n_devices = n_devices
 
     # -- public ------------------------------------------------------------
     def analyze_text(self, hlo_text: str) -> Report:
-        mod = parse_hlo(hlo_text)
-        trips = trip_counts_from_text(hlo_text)
+        mod, trips = _parse_cached(hlo_text)
         return self.analyze_module(mod, trips)
 
     def analyze_module(self, mod: HloModule, trips: dict) -> Report:
@@ -122,9 +130,14 @@ class Analyzer:
         if entry is None:
             entry = self.machine.table["vpu"]
         cyc = units * entry.cycles_per_unit * mult
-        share = cyc / len(entry.ports)
-        for p in entry.ports:
-            acc.ports[p] += share
+        if entry.port_weights is None:
+            share = cyc / len(entry.ports)
+            for p in entry.ports:
+                acc.ports[p] += share
+        else:
+            wsum = sum(entry.port_weights)
+            for p, w in zip(entry.ports, entry.port_weights):
+                acc.ports[p] += cyc * (w / wsum)
         return cyc
 
     _SLICE_LIKE = frozenset({"slice", "dynamic-slice", "gather"})
@@ -378,6 +391,42 @@ class _Acc:
         self.loop_bytes = {}
 
 
-def analyze(hlo_text: str, machine: MachineModel,
-            n_devices: int = 1) -> Report:
+@functools.lru_cache(maxsize=4)
+def _parse_cached(hlo_text: str) -> tuple:
+    """Memoized (module, trip-counts) for one HLO text.
+
+    The parse products are read-only after construction, so one parse can
+    be shared by every machine in a `compare()` fan-out (and by repeated
+    `analyze()` calls on the same text). Deliberately small: each entry
+    pins the raw HLO text plus its parse tree for the process lifetime."""
+    return parse_hlo(hlo_text), trip_counts_from_text(hlo_text)
+
+
+def analyze(hlo_text: str, machine, n_devices: int = 1) -> Report:
     return Analyzer(machine, n_devices).analyze_text(hlo_text)
+
+
+def compare(hlo_text: str, machines=None, n_devices: int = 1,
+            max_workers: int | None = None) -> dict:
+    """Analyze one HLO module across several registered machines.
+
+    `machines`: iterable of names and/or MachineModels; defaults to every
+    registered machine. The module is parsed once (memoized) and shared
+    read-only by all analyses, which fan out on a thread pool — each
+    Analyzer only mutates its own accumulator. (The analyses are pure
+    Python, so the pool buys overlap only where the GIL is released; the
+    single shared parse is the main saving.) Returns
+    {machine name: Report} preserving the requested order.
+    """
+    if machines is None:
+        machines = registered_names()
+    models = [get_machine(m) for m in machines]
+    mod, trips = _parse_cached(hlo_text)
+
+    def run(model):
+        return Analyzer(model, n_devices).analyze_module(mod, trips)
+
+    workers = max_workers or min(8, max(1, len(models)))
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        reports = list(ex.map(run, models))
+    return {m.name: r for m, r in zip(models, reports)}

@@ -15,8 +15,6 @@ models such as Roofline" (paper §I.A).
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 
 from repro.core import portmodel
 from repro.core.machine import MACHINES, MachineModel

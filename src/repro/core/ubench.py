@@ -15,13 +15,11 @@ DESIGN.md §7); the host model produced here drives the RPE validation
 from __future__ import annotations
 
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.machine import MachineModel, host_cpu_model
+from repro.core.machine import MachineModel, host_cpu_model, register
 
 N_SMALL = 8192             # 32 KiB f32 — L1/L2-resident (in-core regime)
 N_BIG = 1 << 23            # 32 MiB — memory regime (DMA class)
@@ -52,14 +50,17 @@ def _timeit(fn, *args, reps: int = 5) -> float:
 def measure_host_rates(n: int = N_SMALL) -> dict:
     key = jax.random.PRNGKey(0)
     a = jnp.abs(jax.random.normal(key, (n,), jnp.float32)) + 0.5
-    b = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)) + 0.5
+    b = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,),
+                                  jnp.float32)) + 0.5
     idx = jax.random.permutation(jax.random.PRNGKey(3), n)
     m1 = jax.random.normal(key, (MAT, MAT), jnp.float32) * 0.01
     big = jax.random.normal(key, (N_BIG,), jnp.float32)
 
     t_add = _timeit(_chain(lambda x, c: x + c, K_CHAIN), a, b) / K_CHAIN
-    t_fma = _timeit(_chain(lambda x, c: x * 0.999 + c, K_CHAIN), a, b) / K_CHAIN
-    t_div = _timeit(_chain(lambda x, c: c / (x + 1.0), K_CHAIN), a, b) / K_CHAIN
+    t_fma = _timeit(_chain(lambda x, c: x * 0.999 + c, K_CHAIN),
+                    a, b) / K_CHAIN
+    t_div = _timeit(_chain(lambda x, c: c / (x + 1.0), K_CHAIN),
+                    a, b) / K_CHAIN
     t_exp = _timeit(_chain(lambda x: jnp.exp(-x), K_CHAIN), a) / K_CHAIN
     t_gat = _timeit(_chain(lambda x, i: x[i], K_CHAIN), a, idx) / K_CHAIN
     t_mov = _timeit(_chain(lambda x: jnp.roll(x, 1), K_CHAIN), a) / K_CHAIN
@@ -102,10 +103,12 @@ _CAL_CACHE: dict = {}
 
 
 def calibrated_host_model(refresh: bool = False) -> MachineModel:
+    """Measure this host and publish the result into the machine registry
+    (as `host_cpu`), so compare()/Analyzer can address it by name."""
     if "model" not in _CAL_CACHE or refresh:
         rates = measure_host_rates()
         raw = rates.pop("_raw")
-        m = host_cpu_model(rates)
+        m = register(host_cpu_model(rates), replace=True)
         _CAL_CACHE["model"] = m
         _CAL_CACHE["raw"] = raw
     return _CAL_CACHE["model"]

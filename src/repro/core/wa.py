@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.hloparse import HloModule, Instr, parse_hlo
+from repro.core.hloparse import HloModule, parse_hlo
 from repro.utils.hw import dtype_bytes
 
 
@@ -122,6 +122,72 @@ def machine_traffic_ratio(mode: str, *, nt_stores: bool = False,
     if mode == "explicit_only":         # Zen 4
         return (1.0 if nt_stores else 2.0) + partial_extra
     raise ValueError(mode)
+
+
+# --- per-machine mode selection ---------------------------------------------
+#
+# Every registered MachineModel is tagged with its wa_mode
+# (repro.core.machine), so the Fig. 4 behavioural mode is a property of
+# the machine file instead of an ad-hoc argument at each call site.
+
+def wa_mode_of(machine) -> str:
+    """WA behavioural mode of a machine (model or registered name)."""
+    if isinstance(machine, str):
+        from repro.core.machine import get_machine
+        machine = get_machine(machine)
+    return getattr(machine, "wa_mode", "") or "auto_claim"
+
+
+def traffic_ratio_for(machine, *, nt_stores: bool = False,
+                      bw_utilization: float = 1.0,
+                      tile_full_frac: float = 1.0) -> float:
+    """`machine_traffic_ratio` with the mode taken from the machine tag."""
+    return machine_traffic_ratio(wa_mode_of(machine), nt_stores=nt_stores,
+                                 bw_utilization=bw_utilization,
+                                 tile_full_frac=tile_full_frac)
+
+
+def apply_wa_mode(scan: dict, machine, *, nt_stores: bool = False,
+                  bw_utilization: float = 1.0) -> dict:
+    """Apply one machine's WA mode to a (machine-independent) store scan.
+
+    `scan` is an `analyze_module_stores` result. The scan's RMW reads
+    become the partial-tile term: tile_full_frac = 1 - rmw/stored, which
+    may go negative for badly misaligned stores (rmw > stored) — the
+    ratio then correctly exceeds the mode's base. Returns the scan dict
+    extended with `wa_mode` and `traffic_bytes` = stored x machine ratio
+    + the donation-copy term; the machine ratio replaces `wa_ratio` (the
+    scan's tile-level value is preserved as `tile_wa_ratio`).
+    """
+    stored = scan["stored_bytes"]
+    full_frac = 1.0 - scan["rmw_read_bytes"] / stored if stored > 0 else 1.0
+    ratio = traffic_ratio_for(machine, nt_stores=nt_stores,
+                              bw_utilization=bw_utilization,
+                              tile_full_frac=full_frac)
+    out = dict(scan)
+    out["wa_mode"] = wa_mode_of(machine)
+    out["tile_wa_ratio"] = scan.get("wa_ratio")
+    out["wa_ratio"] = ratio
+    # missing-donation copies (read+write the whole buffer) happen on
+    # every machine regardless of WA mode
+    out["traffic_bytes"] = stored * ratio + 2.0 * scan.get("copy_bytes", 0.0)
+    return out
+
+
+def machine_store_traffic(hlo, machine, *, nt_stores: bool = False,
+                          bw_utilization: float = 1.0) -> dict:
+    """WA-adjusted store traffic of one module on one machine.
+
+    Combines the tile-level module scan (which stores exist, and what
+    fraction overwrites full tiles) with the machine's behavioural mode
+    (what a partial-tile / missed store costs there). When comparing
+    many machines on one module, run the scan once and call
+    `apply_wa_mode` per machine instead.
+    """
+    base = analyze_module_stores(hlo) if isinstance(hlo, HloModule) \
+        else analyze_text_stores(hlo)
+    return apply_wa_mode(base, machine, nt_stores=nt_stores,
+                         bw_utilization=bw_utilization)
 
 
 # --- module-level scan ------------------------------------------------------

@@ -192,6 +192,14 @@ def jacobi_2d5pt(u, *, bm=64, interpret=False):
     m = h - 2
     bm = min(bm, m)
     assert m % bm == 0, (h, bm)
+    if Element is None:   # jax without element-indexed dims: no halo
+        # tiling available — run the same kernel as one whole-array block
+        return pl.pallas_call(
+            _jacobi2d_kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((h, w), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((m, w - 2), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, w - 2), u.dtype),
+            interpret=interpret)(u)
     return pl.pallas_call(
         _jacobi2d_kernel, grid=(m // bm,),
         in_specs=[pl.BlockSpec((Element(bm + 2), w), lambda i: (i * bm, 0))],
@@ -213,6 +221,14 @@ def jacobi_3d7pt(u, *, bz=8, interpret=False):
     m = d - 2
     bz = min(bz, m)
     assert m % bz == 0, (d, bz)
+    if Element is None:   # see jacobi_2d5pt: whole-array fallback
+        return pl.pallas_call(
+            _jacobi3d_kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((d, h, w), lambda i: (0, 0, 0))],
+            out_specs=pl.BlockSpec((m, h - 2, w - 2),
+                                   lambda i: (0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, h - 2, w - 2), u.dtype),
+            interpret=interpret)(u)
     return pl.pallas_call(
         _jacobi3d_kernel, grid=(m // bz,),
         in_specs=[pl.BlockSpec((Element(bz + 2), h, w),

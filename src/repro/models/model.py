@@ -250,7 +250,9 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     total = 0
     for blk in cfg.layer_plan():
         defs = block_defs(cfg, blk)
-        for path, d in jax.tree.flatten_with_path(defs, is_leaf=_is_def)[0]:
+        flat = jax.tree_util.tree_flatten_with_path(
+            defs, is_leaf=_is_def)[0]   # jax.tree.flatten_with_path needs
+        for path, d in flat:            # newer jax than the floor we support
             n = math.prod(d.shape)
             if active_only and d.shape and d.shape[0] == cfg.n_experts \
                     and len(d.shape) == 3 and cfg.n_experts > 0:

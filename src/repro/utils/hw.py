@@ -29,7 +29,7 @@ class ChipSpec:
     clock_hz: float
     n_mxu: int                 # 128x128 systolic arrays per core
     n_vpu: int                 # (8,128) vector ALU lanesets usable per cycle
-    native_tile: tuple = (8, 128)  # HBM/VMEM tile granule (fp32 sublane x lane)
+    native_tile: tuple = (8, 128)  # tile granule (fp32 sublane x lane)
 
 
 # TPU v5e — the assignment's target chip. 197 bf16 TFLOP/s at ~0.94 GHz
@@ -81,6 +81,82 @@ TPU_V4 = ChipSpec(
 )
 
 CHIPS = {c.name: c for c in (TPU_V5E, TPU_V5P, TPU_V4)}
+
+
+# --- the paper's actual CPUs (Table I / Table II core features) -------------
+
+@dataclasses.dataclass(frozen=True)
+class CpuSpec:
+    """Core + node features of one paper CPU (Table I / Table II).
+
+    Port counts describe the scheduler-visible functional-unit groups the
+    in-core model needs: FMA-capable SIMD pipes (the `mxu` analogue), total
+    SIMD/FP pipes (`vpu`), load/store pipes (`vlsu`), and the single
+    divider pipe (`vdiv`).
+    """
+    name: str
+    vendor: str
+    uarch: str
+    isa: str
+    clock_hz: float            # fixed core clock used in the paper's runs
+    issue_width: int           # rename/dispatch width, µops per cycle
+    simd_width_bytes: int      # native datapath width per FP pipe
+    n_fma: int                 # FMA-capable SIMD pipes
+    n_simd: int                # all SIMD/FP ALU pipes
+    n_load: int                # load pipes (SIMD-capable)
+    n_store: int               # store-data pipes
+    fma_latency: float         # cycles
+    load_latency: float        # L1 load-to-use, cycles (vector)
+    fdiv_recip_tput: float     # cycles per full-width vector divide
+    fdiv_latency: float
+    l1d_bytes: int
+    mem_bw: float              # bytes/s sustained per socket (stream-like)
+    xsocket_bw: float          # bytes/s cross-socket/C2C link
+    cores: int                 # cores per socket
+    wa_mode: str               # write-allocate behaviour (core/wa.py)
+
+
+# AMD Genoa / Zen 4 (EPYC 9654). 6-wide; 4 FP pipes of which FP0/FP1 are
+# 256-bit FMA (AVX-512 is double-pumped on the 256-bit datapath); divider
+# on one pipe, not pipelined. WA evasion only via explicit NT stores.
+ZEN4 = CpuSpec(
+    name="zen4", vendor="AMD", uarch="Zen 4", isa="x86-64 AVX-512(2x256b)",
+    clock_hz=2.4e9, issue_width=6, simd_width_bytes=32,
+    n_fma=2, n_simd=4, n_load=2, n_store=1,
+    fma_latency=4.0, load_latency=7.0,
+    fdiv_recip_tput=6.5, fdiv_latency=13.0,
+    l1d_bytes=32 * 1024, mem_bw=460.8e9, xsocket_bw=50e9, cores=96,
+    wa_mode="explicit_only",
+)
+
+# Intel Sapphire Rapids / Golden Cove (Xeon 8470). 6-wide; with AVX-512
+# ports P0+P1 fuse into one 512-bit FMA pipe next to P5 -> two 512-bit
+# FMA pipes; divider on P0; 2x512b loads + 1x512b store per cycle.
+# SpecI2M evades write-allocates only near bandwidth saturation.
+GOLDEN_COVE = CpuSpec(
+    name="golden_cove", vendor="Intel", uarch="Golden Cove",
+    isa="x86-64 AVX-512", clock_hz=2.0e9, issue_width=6,
+    simd_width_bytes=64, n_fma=2, n_simd=2, n_load=2, n_store=1,
+    fma_latency=4.0, load_latency=7.0,
+    fdiv_recip_tput=8.0, fdiv_latency=16.0,
+    l1d_bytes=48 * 1024, mem_bw=307.2e9, xsocket_bw=48e9, cores=52,
+    wa_mode="saturation_gated",
+)
+
+# NVIDIA Grace / Neoverse V2. 8-wide; 4x128-bit SIMD pipes V0..V3, all
+# FMA-capable; divider on V0; 3 load + 2 store pipes. The cache claims
+# lines on store misses -> next-to-optimal automatic WA evasion.
+NEOVERSE_V2 = CpuSpec(
+    name="neoverse_v2", vendor="NVIDIA", uarch="Neoverse V2",
+    isa="AArch64 NEON/SVE2(4x128b)", clock_hz=3.4e9, issue_width=8,
+    simd_width_bytes=16, n_fma=4, n_simd=4, n_load=3, n_store=2,
+    fma_latency=4.0, load_latency=6.0,
+    fdiv_recip_tput=7.0, fdiv_latency=15.0,
+    l1d_bytes=64 * 1024, mem_bw=500e9, xsocket_bw=450e9, cores=72,
+    wa_mode="auto_claim",
+)
+
+CPU_CHIPS = {c.name: c for c in (ZEN4, GOLDEN_COVE, NEOVERSE_V2)}
 
 # Assignment-mandated roofline constants (v5e).
 PEAK_FLOPS = TPU_V5E.bf16_flops

@@ -1,0 +1,268 @@
+"""Minimal stand-in for `hypothesis` used when the real package is not
+installed (satellite of the CI issue: the suite must *run* everywhere,
+with full property-based coverage whenever hypothesis is available).
+
+conftest.py installs these objects into ``sys.modules`` as `hypothesis`,
+`hypothesis.strategies`, and `hypothesis.extra.numpy` BEFORE test modules
+import them. `@given` then draws a small, deterministically-seeded set of
+examples per test (boundary values first), which keeps the properties
+exercised — just with far fewer examples than real hypothesis.
+
+Only the API surface this repo's tests use is implemented: integers,
+floats, booleans, sampled_from, lists, tuples, just, arrays (from
+hypothesis.extra.numpy), @given, settings, HealthCheck.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+import numpy as np
+
+N_EXAMPLES = 12
+
+
+class _Strategy:
+    """A strategy draws one value from a seeded Random; `boundary()`
+    yields the deterministic edge examples tried before random draws."""
+
+    def draw(self, rnd: random.Random):
+        raise NotImplementedError
+
+    def boundary(self) -> list:
+        return []
+
+    # real hypothesis supports `.map`/`.filter`; keep the common two
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+
+class _Mapped(_Strategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def draw(self, rnd):
+        return self.fn(self.base.draw(rnd))
+
+    def boundary(self):
+        return [self.fn(v) for v in self.base.boundary()]
+
+
+class _Filtered(_Strategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def draw(self, rnd):
+        for _ in range(100):
+            v = self.base.draw(rnd)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate too strict for stub strategy")
+
+    def boundary(self):
+        return [v for v in self.base.boundary() if self.pred(v)]
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=0, max_value=1 << 16):
+        self.lo, self.hi = min_value, max_value
+
+    def draw(self, rnd):
+        return rnd.randint(self.lo, self.hi)
+
+    def boundary(self):
+        mid = (self.lo + self.hi) // 2
+        return list(dict.fromkeys([self.lo, self.hi, mid]))
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=0.0, max_value=1.0, width=64, **_kw):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def draw(self, rnd):
+        return rnd.uniform(self.lo, self.hi)
+
+    def boundary(self):
+        return [self.lo, self.hi, 0.5 * (self.lo + self.hi)]
+
+
+class _Booleans(_Strategy):
+    def draw(self, rnd):
+        return rnd.random() < 0.5
+
+    def boundary(self):
+        return [False, True]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def draw(self, rnd):
+        return rnd.choice(self.elements)
+
+    def boundary(self):
+        return self.elements[: min(3, len(self.elements))]
+
+
+class _Just(_Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def draw(self, rnd):
+        return self.value
+
+    def boundary(self):
+        return [self.value]
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=8, unique=False):
+        self.el, self.lo = elements, min_size
+        self.hi, self.unique = max_size, unique
+
+    def draw(self, rnd):
+        n = rnd.randint(self.lo, self.hi)
+        out: list = []
+        tries = 0
+        while len(out) < n and tries < 100 * (n + 1):
+            v = self.el.draw(rnd)
+            tries += 1
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+    def boundary(self):
+        b = []
+        if self.lo == 0:
+            b.append([])
+        eb = self.el.boundary()
+        if eb:
+            b.append((eb * self.hi)[: max(self.lo, min(self.hi, 2))])
+        return b
+
+
+class _Tuples(_Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def draw(self, rnd):
+        return tuple(s.draw(rnd) for s in self.strategies)
+
+    def boundary(self):
+        bs = [s.boundary() or [s.draw(random.Random(0))]
+              for s in self.strategies]
+        return [tuple(b[0] for b in bs)]
+
+
+class _Arrays(_Strategy):
+    def __init__(self, dtype, shape, elements=None, **_kw):
+        self.dtype = np.dtype(dtype)
+        self.shape = shape
+        self.elements = elements
+
+    def _shape(self, rnd):
+        s = self.shape
+        if isinstance(s, _Strategy):
+            s = s.draw(rnd)
+        return (s,) if isinstance(s, int) else tuple(s)
+
+    def draw(self, rnd):
+        shape = self._shape(rnd)
+        n = int(np.prod(shape)) if shape else 1
+        el = self.elements or _Floats(-1e3, 1e3)
+        flat = [el.draw(rnd) for _ in range(n)]
+        return np.array(flat, dtype=self.dtype).reshape(shape)
+
+    def boundary(self):
+        rnd = random.Random(0)
+        shape = self._shape(rnd)
+        return [np.zeros(shape, dtype=self.dtype)]
+
+
+def given(*gargs, **gkwargs):
+    """Deterministic mini-@given: boundary examples, then seeded draws."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            strategies = list(gargs)
+            rnd = random.Random(fn.__qualname__)
+            runs = []
+            bounds = [s.boundary() for s in strategies]
+            if all(bounds):
+                runs.append([b[0] for b in bounds])
+            for _ in range(N_EXAMPLES):
+                runs.append([s.draw(rnd) for s in strategies])
+            kw_strats = {k: v for k, v in gkwargs.items()}
+            for drawn in runs:
+                kws = dict(kwargs)
+                kws.update({k: v.draw(rnd) for k, v in kw_strats.items()})
+                fn(*args, *drawn, **kws)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_stub = True
+        return wrapper
+
+    return deco
+
+
+class settings:
+    """No-op stand-in for hypothesis.settings (incl. profile registry)."""
+
+    _profiles: dict = {}
+
+    def __init__(self, *args, **kwargs):
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, *args, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._profiles.setdefault(name, {})
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+def _build_modules() -> dict:
+    """{module name: module} ready for sys.modules insertion."""
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _Integers
+    st.floats = _Floats
+    st.booleans = _Booleans
+    st.sampled_from = _SampledFrom
+    st.lists = _Lists
+    st.tuples = _Tuples
+    st.just = _Just
+
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+    hnp.arrays = _Arrays
+
+    extra = types.ModuleType("hypothesis.extra")
+    extra.numpy = hnp
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    hyp.extra = extra
+    hyp.__version__ = "0.0-stub"
+    hyp.__is_repro_stub__ = True
+
+    return {"hypothesis": hyp, "hypothesis.strategies": st,
+            "hypothesis.extra": extra, "hypothesis.extra.numpy": hnp}

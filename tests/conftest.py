@@ -7,7 +7,19 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings, HealthCheck  # noqa: E402
+# Degrade gracefully when `hypothesis` is not installed (it is a dev
+# extra: `pip install -e .[dev]`): install the deterministic mini-stub
+# from tests/_hypothesis_stub.py into sys.modules BEFORE any test module
+# imports it, so collection never errors. With real hypothesis present,
+# register the repro profile as before.
+try:
+    from hypothesis import HealthCheck, settings  # noqa: E402
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_stub import _build_modules  # noqa: E402
+
+    sys.modules.update(_build_modules())
+    from hypothesis import HealthCheck, settings  # noqa: E402
 
 settings.register_profile(
     "repro",

@@ -77,7 +77,7 @@ def test_cache_pspecs_shard_kv_seq(arch):
     specs = M.cache_pspecs(cfg, SERVE_RULES, MESH_SIZES_SP,
                            batch=128, seq=32768)
     # attention KV cache: batch over data, seq over model
-    flat = jax.tree.leaves_with_path(
+    flat = jax.tree_util.tree_leaves_with_path(
         specs, is_leaf=lambda x: x is None or hasattr(x, "index"))
     kv = [s for p, s in flat if "k" == p[-1].key or "v" == p[-1].key]
     assert kv, "no attention caches found"
