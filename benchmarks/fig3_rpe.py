@@ -8,7 +8,7 @@ to results/rpe_records.json so reruns are incremental.
 
 from __future__ import annotations
 
-import json
+import math
 import os
 
 from repro.core import rpe
@@ -21,9 +21,12 @@ def run(full: bool = False, cache: str = CACHE):
     sizes = tuple(rpe.SIZES) if full else ("S", "L")
     done = {}
     if os.path.exists(cache):
-        with open(cache) as f:
-            for d in json.load(f):
-                done[(d["kernel"], d["variant"], d["size"])] = d
+        # Only finite records count as done: failure sentinels (NaN /
+        # null t_meas) are retried instead of pinning the cache to a
+        # bad environment forever.
+        for r in rpe.load_records(cache):
+            if math.isfinite(r.t_meas):
+                done[(r.kernel, r.variant, r.size)] = r
     records = []
     changed = False
     from repro.kernels.stream.ref import KERNELS_13
@@ -32,8 +35,7 @@ def run(full: bool = False, cache: str = CACHE):
             for s in sizes:
                 kk = (k, v, s)
                 if kk in done:
-                    d = done[kk]
-                    records.append(rpe.RpeRecord(**d))
+                    records.append(done[kk])
                     continue
                 try:
                     r = rpe.run_block(k, v, s)
@@ -41,13 +43,14 @@ def run(full: bool = False, cache: str = CACHE):
                     r = rpe.RpeRecord(k, v, s, float("nan"),
                                       float("nan"), float("nan"))
                 records.append(r)
-                done[kk] = r.__dict__
-                changed = True
+                if math.isfinite(r.t_meas):
+                    done[kk] = r
+                    changed = True
     if changed:
-        os.makedirs(os.path.dirname(cache), exist_ok=True)
-        with open(cache, "w") as f:
-            json.dump([d if isinstance(d, dict) else d for d in
-                       (x.__dict__ for x in records)], f, indent=1)
+        # Persist every successful block ever measured (done spans
+        # quick and --full sweeps), never the failure sentinels.
+        rpe.save_records(sorted(done.values(), key=lambda r: (
+            r.kernel, r.variant, r.size)), cache)
     return records
 
 
@@ -57,6 +60,9 @@ def main(quick: bool = True):
     lines = []
     for model in ("port_model", "naive_baseline"):
         st = s[model]
+        if not st:          # every block failed — degrade, don't crash
+            lines.append(f"fig3,{model},0,no_finite_records")
+            continue
         lines.append(
             f"fig3,{model},0,"
             f"n={st['n']};right_of_zero={st['right_of_zero_pct']:.0f}%;"

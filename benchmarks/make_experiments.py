@@ -64,11 +64,14 @@ def gen_fig3() -> str:
     import sys
     sys.path.insert(0, "src")
     from repro.core import rpe
-    recs = [rpe.RpeRecord(**d) for d in json.load(open(path))]
+    recs = rpe.load_records(path)
     s = rpe.summarize(recs)
     out = []
     for model in ("port_model", "naive_baseline"):
         st = s[model]
+        if not st:
+            out.append(f"- **{model}**: (no finite records)")
+            continue
         out.append(f"- **{model}**: n={st['n']}, "
                    f"right-of-zero {st['right_of_zero_pct']:.0f}%, "
                    f"within +10% {st['within10_pct']:.0f}%, "

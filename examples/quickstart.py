@@ -51,10 +51,8 @@ def main():
     ws = 2 * 4 * N
     t_pred = max(rep_h.seconds_incore(host), rep_h.bytes_hbm / tier_bw(ws))
     peak, bw = host_peaks()
-    ca = compiled.cost_analysis()   # list-of-dicts on older jax
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
-    t_naive = baseline.predict(ca or {}, host, peak, bw).seconds
+    ca = compiled.cost_analysis()   # predict() normalizes old-jax lists
+    t_naive = baseline.predict(ca, host, peak, bw).seconds
 
     out = fn(b, c)
     jax.block_until_ready(out)

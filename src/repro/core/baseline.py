@@ -31,10 +31,20 @@ class BaselineReport:
         return "compute" if self.t_compute >= self.t_memory else "memory"
 
 
-def predict(cost_analysis: dict, machine: MachineModel,
+def normalize_cost_analysis(cost_analysis: dict | list | None) -> dict:
+    """compiled.cost_analysis() returns a list-of-dicts on older jax
+    (one entry per executable) and a plain dict on newer releases;
+    collapse both (and None) to a dict."""
+    if isinstance(cost_analysis, (list, tuple)):
+        cost_analysis = cost_analysis[0] if cost_analysis else {}
+    return cost_analysis or {}
+
+
+def predict(cost_analysis: dict | list | None, machine: MachineModel,
             peak_flops: float | None = None,
             mem_bw: float | None = None) -> BaselineReport:
     """Naive roofline from XLA cost analysis (per-device numbers)."""
+    cost_analysis = normalize_cost_analysis(cost_analysis)
     chip = machine.chip
     if peak_flops is None:
         peak_flops = chip.bf16_flops if chip else 1e11

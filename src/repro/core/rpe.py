@@ -186,6 +186,46 @@ class RpeRecord:
         return (self.t_meas - self.t_naive) / self.t_meas
 
 
+def record_from_dict(d: dict) -> RpeRecord:
+    """Rebuild a record from JSON, mapping null timings back to NaN."""
+    return RpeRecord(**{k: (float("nan")
+                            if v is None and k.startswith("t_") else v)
+                        for k, v in d.items()})
+
+
+def load_records(path: str) -> list:
+    """Load cached records; a corrupt/truncated cache reads as empty
+    (it is regenerable) rather than wedging every later run."""
+    import json
+    try:
+        with open(path) as f:
+            recs = [record_from_dict(d) for d in json.load(f)]
+    except (json.JSONDecodeError, TypeError, KeyError):
+        return []
+    return [r for r in recs
+            if all(isinstance(getattr(r, k), str)
+                   for k in ("kernel", "variant", "size"))]
+
+
+def save_records(records: list, path: str) -> None:
+    """Persist records as strict JSON (non-finite floats become null).
+    Writes atomically so an interrupted run cannot truncate the cache."""
+    import json
+    import os
+    rows = []
+    for r in records:
+        d = dict(r.__dict__)
+        for k, v in d.items():
+            if isinstance(v, float) and not np.isfinite(v):
+                d[k] = None
+        rows.append(d)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rows, f, indent=1, allow_nan=False)
+    os.replace(tmp, path)
+
+
 def run_block(kernel: str, variant: str, size: str) -> RpeRecord:
     from repro.core.ubench import tier_bw
     n = SIZES[size]
@@ -200,7 +240,7 @@ def run_block(kernel: str, variant: str, size: str) -> RpeRecord:
     ws = sum(4 * (a.size if hasattr(a, "size") else 1) for a in args) or 4 * n
     t_mem = rep.bytes_hbm / tier_bw(float(ws))
     t_port = max(rep.seconds_incore(machine), t_mem)
-    ca = compiled.cost_analysis() or {}
+    ca = compiled.cost_analysis()   # predict() normalizes old-jax lists
     t_naive = baseline_lib.predict(ca, machine, peak, bw).seconds
     return RpeRecord(kernel, variant, size, t_meas, t_port, t_naive)
 
@@ -235,7 +275,7 @@ def summarize(records: list) -> dict:
             "abs_within10_pct": float((np.abs(r) < 0.10).mean() * 100),
             "factor2_off": int((r <= -1.0).sum()),
             "mean_underpred_rpe": float(r[r >= 0].mean()) if (r >= 0).any()
-            else None,
+            else float("nan"),
             "mean_abs_rpe": float(np.abs(r).mean()),
         }
     return {

@@ -167,7 +167,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                           ma.temp_size_in_bytes -
                           ma.alias_size_in_bytes),
     }
-    ca = compiled.cost_analysis() or {}
+    from repro.core.baseline import normalize_cost_analysis
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
                    "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
                    "transcendentals": float(ca.get("transcendentals", 0.0))}

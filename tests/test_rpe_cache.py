@@ -1,0 +1,135 @@
+"""fig3 RPE cache hygiene: strict-JSON persistence (NaN <-> null),
+failure sentinels are retried instead of pinned, and the summarize
+consumers degrade gracefully when no finite records exist."""
+
+import json
+import math
+import sys
+
+import pytest
+
+from repro.core import rpe
+
+sys.path.insert(0, ".")
+from benchmarks import fig3_rpe  # noqa: E402
+
+
+def _rec(kernel="copy", variant="jnp", size="S", t=1e-4):
+    return rpe.RpeRecord(kernel, variant, size, t, t * 2, t * 3)
+
+
+def _nan_rec(kernel="copy", variant="jnp", size="S"):
+    nan = float("nan")
+    return rpe.RpeRecord(kernel, variant, size, nan, nan, nan)
+
+
+def test_save_records_emits_strict_json(tmp_path):
+    path = str(tmp_path / "cache.json")
+    rpe.save_records([_rec(), _nan_rec("add")], path)
+    raw = open(path).read()
+    assert "NaN" not in raw
+    data = json.loads(raw)          # would reject bare NaN tokens
+    assert data[1]["t_meas"] is None
+
+
+def test_load_records_maps_null_back_to_nan(tmp_path):
+    path = str(tmp_path / "cache.json")
+    rpe.save_records([_rec(), _nan_rec("add")], path)
+    recs = rpe.load_records(path)
+    assert recs[0].t_meas == pytest.approx(1e-4)
+    assert math.isnan(recs[1].t_meas)
+
+
+def test_load_records_tolerates_corrupt_cache(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text('[{"kernel": "copy", "varia')   # truncated write
+    assert rpe.load_records(str(path)) == []
+    path.write_text('[{"kernel": null, "variant": "jnp", "size": "S", '
+                    '"t_meas": null, "t_port": null, "t_naive": null}]')
+    assert rpe.load_records(str(path)) == []        # null string field
+
+
+def test_save_records_is_atomic(tmp_path):
+    path = str(tmp_path / "cache.json")
+    rpe.save_records([_rec()], path)
+    assert not (tmp_path / "cache.json.tmp").exists()
+    assert len(rpe.load_records(path)) == 1
+
+
+def test_run_retries_cached_failure_records(tmp_path, monkeypatch):
+    path = str(tmp_path / "cache.json")
+    rpe.save_records([_nan_rec(k, v, s)
+                      for k in ("copy", "add")
+                      for v in ("jnp", "fori")
+                      for s in ("S", "L")], path)
+    calls = []
+
+    def fake_run_block(k, v, s):
+        calls.append((k, v, s))
+        return _rec(k, v, s)
+
+    monkeypatch.setattr(rpe, "run_block", fake_run_block)
+    monkeypatch.setattr("repro.kernels.stream.ref.KERNELS_13",
+                        ("copy", "add"))
+    records = fig3_rpe.run(full=False, cache=path)
+    assert len(calls) == 8          # every NaN sentinel was retried
+    assert all(math.isfinite(r.t_meas) for r in records)
+    # and the refreshed cache now counts them as done
+    calls.clear()
+    fig3_rpe.run(full=False, cache=path)
+    assert calls == []
+
+
+def test_run_does_not_persist_failures(tmp_path, monkeypatch):
+    path = str(tmp_path / "cache.json")
+
+    def failing_run_block(k, v, s):
+        if k == "add":
+            raise RuntimeError("boom")
+        return _rec(k, v, s)
+
+    monkeypatch.setattr(rpe, "run_block", failing_run_block)
+    monkeypatch.setattr("repro.kernels.stream.ref.KERNELS_13",
+                        ("copy", "add"))
+    records = fig3_rpe.run(full=False, cache=path)
+    assert sum(1 for r in records if math.isnan(r.t_meas)) == 4
+    cached = rpe.load_records(path)
+    assert all(math.isfinite(r.t_meas) for r in cached)
+    assert {r.kernel for r in cached} == {"copy"}
+
+
+def test_summarize_all_overpredicted_formats_cleanly():
+    # every prediction slower than measurement => no rpe >= 0;
+    # mean_underpred_rpe must stay format-safe (NaN, not None)
+    s = rpe.summarize([_rec(t=1e-4)])     # t_port/t_naive > t_meas
+    st = s["port_model"]
+    assert math.isnan(st["mean_underpred_rpe"])
+    assert f"{st['mean_underpred_rpe']:.2f}" == "nan"
+
+
+def test_summarize_empty_on_all_nan():
+    s = rpe.summarize([_nan_rec()])
+    assert s["port_model"] == {}
+    assert s["naive_baseline"] == {}
+
+
+def test_gen_fig3_degrades_without_finite_records(tmp_path, monkeypatch):
+    from benchmarks import make_experiments
+    monkeypatch.chdir(tmp_path)
+    (tmp_path / "results").mkdir()
+    rpe.save_records([_nan_rec()],
+                     str(tmp_path / "results/rpe_records.json"))
+    out = make_experiments.gen_fig3()
+    assert "(no finite records)" in out
+
+
+def test_baseline_predict_accepts_list_of_dicts():
+    from repro.core import baseline
+    from repro.core.machine import get_machine
+    m = get_machine("tpu_v5e")
+    ca = [{"flops": 2.0e9, "bytes accessed": 1.0e9}]
+    rep = baseline.predict(ca, m, peak_flops=1e9, mem_bw=1e9)
+    assert rep.flops == 2.0e9
+    assert rep.seconds == pytest.approx(2.0)
+    empty = baseline.predict([], m, peak_flops=1e9, mem_bw=1e9)
+    assert empty.seconds == 0.0
