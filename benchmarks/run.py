@@ -13,7 +13,8 @@ import time
 import traceback
 
 MODULES = ("table1_machines", "table2_ports", "table3_instructions",
-           "fig2_unitmix", "fig3_rpe", "fig4_wa", "roofline_sweep")
+           "fig2_unitmix", "fig3_rpe", "fig4_wa", "fig5_memladder",
+           "roofline_sweep")
 
 
 def main() -> None:

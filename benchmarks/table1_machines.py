@@ -64,8 +64,12 @@ def main(quick: bool = False):
             f"socket_tflops={r['socket_tflops_f32']:.1f};"
             f"bw={r['mem_gbs']:.0f}GB/s;clock={r['clock_ghz']:.2f}GHz;"
             f"cores={r['cores']};wa={r['wa_mode']}")
-    tiers = ";".join(f"{int(c) if c != float('inf') else 'inf'}:"
-                     f"{b/1e9:.1f}GB/s" for c, b in mem_tiers())
+    def _cap(c):
+        return str(int(c)) if c != float("inf") else "inf"
+
+    tiers = ";".join(
+        f"{t.name}[{_cap(t.capacity_bytes)}]:"
+        f"{(t.load_bw + t.store_bw)/1e9:.1f}GB/s" for t in mem_tiers())
     lines.append(f"table1,host_mem_tiers,0,{tiers}")
     return lines
 

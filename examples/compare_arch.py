@@ -3,10 +3,11 @@ ONE compiled HLO module on the three paper CPUs (Zen 4 / Genoa, Golden
 Cove / Sapphire Rapids, Neoverse V2 / Grace) and a TPU, side by side.
 
 For each machine the registry fan-out (`portmodel.compare`) reports the
-in-core bound, the bottleneck port, and the WA-adjusted store traffic
-under that machine's write-allocate mode — reproducing the paper's
-qualitative ordering: Grace (auto claim) <= SPR (SpecI2M) <= Zen 4
-(explicit NT stores only).
+in-core bound, the bottleneck port, the tier-resolved bound with its
+bottleneck memory tier (ECM ladder, core/memtier.py), and the
+WA-adjusted store traffic under that machine's write-allocate mode —
+reproducing the paper's qualitative ordering: Grace (auto claim) <=
+SPR (SpecI2M) <= Zen 4 (explicit NT stores only).
 
 Run:  PYTHONPATH=src python examples/compare_arch.py [--seq 128] [--nt]
 """
@@ -72,7 +73,8 @@ def main():
     rows = compare_table(hlo, nt_stores=args.nt)
 
     hdr = (f"{'machine':<13} {'uarch':<22} {'clock':>6} {'bound cy':>12} "
-           f"{'in-core cy':>12} {'t_bound':>9} {'bottleneck':>12} "
+           f"{'in-core cy':>12} {'t_bound':>9} {'t_tier':>9} "
+           f"{'bottleneck':>12} {'tier':>5} "
            f"{'wa_mode':<16} {'wa x':>5} {'store MB':>9}")
     print(f"module: scan[{args.layers}] residual MLP, "
           f"{args.seq}x{args.d_model} f32"
@@ -86,7 +88,10 @@ def main():
         print(f"{name:<13} {uarch:<22} "
               f"{m.clock_hz/1e9:>5.2f}G {rep.bound_cycles:>12.3e} "
               f"{rep.bound_incore_cycles:>12.3e} "
-              f"{rep.seconds(m)*1e6:>7.1f}us {rep.bottleneck():>12} "
+              f"{rep.seconds(m)*1e6:>7.1f}us "
+              f"{rep.tier_bound_seconds(m)*1e6:>7.1f}us "
+              f"{rep.bottleneck():>12} "
+              f"{rep.bottleneck_tier or 'n/a':>5} "
               f"{w['wa_mode']:<16} {w['wa_ratio']:>5.2f} "
               f"{w['traffic_bytes']/1e6:>9.2f}")
 

@@ -1,0 +1,62 @@
+"""Verify that relative links in the repo's markdown docs resolve.
+
+Scans README.md, DESIGN.md, ROADMAP.md, and docs/*.md for inline
+markdown links (``[text](target)``) and checks every non-external,
+non-anchor target exists relative to the file that references it.
+Exits non-zero listing the broken links — CI's docs job runs this.
+
+Usage: python scripts/check_docs_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: inline links; images share the syntax (leading ! is harmless here)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path) -> list:
+    """The markdown files whose links the docs job guarantees."""
+    files = [root / "README.md", root / "DESIGN.md", root / "ROADMAP.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def broken_links(md_file: Path) -> list:
+    """(target, reason) for every unresolvable link in one file."""
+    bad = []
+    text = md_file.read_text(encoding="utf-8")
+    # strip fenced code blocks — ASCII diagrams aren't links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(text):
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md_file.parent / path).exists():
+            bad.append((target, "missing file"))
+    return bad
+
+
+def main() -> int:
+    """Check every doc file; print failures; return the exit code."""
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    failures = 0
+    for f in doc_files(root):
+        for target, reason in broken_links(f):
+            print(f"BROKEN {f}: ({target}) {reason}")
+            failures += 1
+    n = len(doc_files(root))
+    print(f"checked {n} files: "
+          f"{'OK' if not failures else f'{failures} broken links'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,5 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's analysis stack: HLO parsing, in-core port models, WA
+modes, ECM memory ladders, roofline, calibration, and RPE validation.
+
+See docs/architecture.md for the dataflow between these modules.
+"""

@@ -6,6 +6,26 @@ bytes pushed through peak-rate ceilings, with no port structure, no
 latency chains, and no loop-trip awareness. We expose it with the same
 Report-like interface so the RPE harness (paper Fig. 3) can score both
 models on identical inputs.
+
+Old-jax compatibility contract
+------------------------------
+This container pins jax 0.4.37, where ``compiled.cost_analysis()``
+returns a **list of dicts** (one per executable; in practice a
+one-element list for a single-device jit) and spells the traffic key
+``"bytes accessed"`` with a space. Newer jax releases return a plain
+dict. Every consumer in this repo therefore feeds the raw value through
+:func:`normalize_cost_analysis` instead of calling ``.get`` on it
+directly — the PR-1 review found that skipping this crashed
+``predict`` on 0.4.37 and poisoned the Fig. 3 cache with NaN records
+(CHANGES.md). The contract:
+
+* accept a dict, a (possibly empty) list/tuple of dicts, or ``None``;
+* collapse a non-empty list to its first entry (the host executable);
+* collapse empty/None input to ``{}`` so lookups degrade to 0.0
+  instead of raising.
+
+``predict``/``dryrun``/``quickstart`` all route through this module, so
+the old-jax shape never leaks past it.
 """
 
 from __future__ import annotations
@@ -17,6 +37,8 @@ from repro.core.machine import MachineModel
 
 @dataclasses.dataclass
 class BaselineReport:
+    """Naive two-term roofline prediction from raw XLA cost analysis."""
+
     flops: float
     bytes_hbm: float
     transcendentals: float
@@ -25,16 +47,26 @@ class BaselineReport:
 
     @property
     def seconds(self) -> float:
+        """Predicted runtime: the slower of the two roofline terms."""
         return max(self.t_compute, self.t_memory)
 
     def bottleneck(self) -> str:
+        """Which term dominates — "compute" or "memory"."""
         return "compute" if self.t_compute >= self.t_memory else "memory"
 
 
 def normalize_cost_analysis(cost_analysis: dict | list | None) -> dict:
-    """compiled.cost_analysis() returns a list-of-dicts on older jax
-    (one entry per executable) and a plain dict on newer releases;
-    collapse both (and None) to a dict."""
+    """Collapse any ``compiled.cost_analysis()`` shape to a plain dict.
+
+    jax 0.4.37 (this container) returns a list of dicts — one entry per
+    executable, the first being the host executable we want; newer jax
+    returns the dict directly. ``None`` (cost analysis unavailable, e.g.
+    AOT paths on some backends) and the empty list both collapse to
+    ``{}``, so downstream ``.get(key, 0.0)`` lookups yield zeros rather
+    than raising. See the module docstring for the full compatibility
+    contract; keys inside the dict are *not* renamed (old and new jax
+    agree on ``"flops"`` / ``"bytes accessed"`` / ``"transcendentals"``).
+    """
     if isinstance(cost_analysis, (list, tuple)):
         cost_analysis = cost_analysis[0] if cost_analysis else {}
     return cost_analysis or {}
@@ -61,5 +93,6 @@ def predict(cost_analysis: dict | list | None, machine: MachineModel,
 def predict_from_counts(flops: float, byts: float, machine: MachineModel,
                         peak_flops: float | None = None,
                         mem_bw: float | None = None) -> BaselineReport:
+    """`predict` for callers that already hold raw FLOP/byte counts."""
     return predict({"flops": flops, "bytes accessed": byts}, machine,
                    peak_flops, mem_bw)

@@ -33,20 +33,26 @@ _CONST_INT = re.compile(r"constant\((\d+)\)")
 
 @dataclasses.dataclass
 class Shape:
+    """One HLO array shape: element dtype string + dimension tuple."""
+
     dtype: str
     dims: tuple
 
     @property
     def elems(self) -> int:
+        """Total element count (1 for scalars)."""
         return int(math.prod(self.dims)) if self.dims else 1
 
     @property
     def bytes(self) -> int:
+        """Unpadded byte size (elements x dtype width)."""
         return self.elems * dtype_bytes(self.dtype)
 
 
 @dataclasses.dataclass
 class Instr:
+    """One parsed HLO instruction (opcode, shapes, operands, attrs)."""
+
     name: str
     opcode: str
     shapes: list          # list[Shape] (tuple results flattened)
@@ -56,15 +62,19 @@ class Instr:
 
     @property
     def shape(self) -> Shape:
+        """The primary (first) result shape."""
         return self.shapes[0]
 
     def attr_comp(self, key: str) -> str | None:
+        """Name of the computation referenced by a calls/body/condition/
+        to_apply attribute, or None if the attribute is absent."""
         for k, v in _ATTR_CALL.findall(self.attrs):
             if k == key:
                 return v
         return None
 
     def attr_dims(self, key: str) -> tuple:
+        """Integer tuple of a ``key={1,2,...}`` attribute (() if absent)."""
         m = re.search(key + r"=\{([\d,]*)\}", self.attrs)
         if not m or not m.group(1):
             return ()
@@ -73,23 +83,29 @@ class Instr:
 
 @dataclasses.dataclass
 class Computation:
+    """One HLO computation: a named, ordered instruction list."""
+
     name: str
     instrs: list
     is_entry: bool = False
 
     @property
     def root(self) -> Instr:
+        """The ROOT instruction (falls back to the last instruction)."""
         for i in self.instrs:
             if i.is_root:
                 return i
         return self.instrs[-1]
 
     def by_name(self) -> dict:
+        """{instruction name: Instr} lookup for this computation."""
         return {i.name: i for i in self.instrs}
 
 
 @dataclasses.dataclass
 class HloModule:
+    """A parsed HLO module: all computations plus the ENTRY one."""
+
     name: str
     computations: dict    # name -> Computation
     entry: Computation
@@ -121,6 +137,8 @@ def _split_operands_attrs(rest: str) -> tuple:
 
 
 def parse_hlo(text: str) -> HloModule:
+    """Parse ``compiled.as_text()`` into an HloModule (never raises on
+    unknown constructs — they degrade to generic instructions)."""
     mod_name = "unknown"
     m = re.match(r"HloModule\s+([\w\.\-]+)", text)
     if m:

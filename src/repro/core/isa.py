@@ -109,6 +109,7 @@ def _vpu_blocks(elems: int) -> float:
 
 
 def operand_bytes(instr: Instr, shapes_of: dict) -> float:
+    """Total byte size of an instruction's resolvable operands."""
     tot = 0.0
     for op in instr.operands:
         s = shapes_of.get(op)

@@ -42,6 +42,8 @@ PASS_MACS = 128 ** 3
 
 @dataclasses.dataclass(frozen=True)
 class OpEntry:
+    """Machine-file row for one µ-op class: ports, throughput, latency."""
+
     ports: tuple          # which ports can execute this µ-op class
     cycles_per_unit: float
     latency: float        # cycles until result usable
@@ -53,6 +55,9 @@ class OpEntry:
 
 @dataclasses.dataclass(frozen=True)
 class MachineModel:
+    """An OSACA-style machine file: ports, µ-op table, WA mode, memory
+    ladder (see the module docstring and DESIGN.md §4)."""
+
     name: str
     clock_hz: float
     ports: tuple
@@ -65,11 +70,16 @@ class MachineModel:
     isa_name: str = ""
     issue_width: int = 0          # front-end µops/cycle (0 = unmodeled)
     wa_mode: str = "auto_claim"   # write-allocate behaviour (core/wa.py)
+    # memory hierarchy (ECM ladder, innermost first — core/memtier.py)
+    mem_tiers: tuple = ()
+    cores: int = 1                # cores per socket driving shared tiers
 
     def entry(self, cls: str) -> OpEntry:
+        """The OpEntry of one µ-op class."""
         return self.table[cls]
 
     def seconds(self, cycles: float) -> float:
+        """Convert a cycle count to seconds at this machine's clock."""
         return cycles / self.clock_hz
 
 
@@ -83,7 +93,7 @@ _WA_MODES = ("auto_claim", "saturation_gated", "explicit_only")
 
 
 class MachineValidationError(ValueError):
-    pass
+    """A machine file failed `validate_model`'s sanity checks."""
 
 
 def validate_model(model: MachineModel) -> None:
@@ -121,6 +131,31 @@ def validate_model(model: MachineModel) -> None:
             f"(expected one of {_WA_MODES})")
     if not model.clock_hz > 0:
         raise MachineValidationError(f"{model.name}: clock_hz must be > 0")
+    prev_cap = 0.0
+    for t in model.mem_tiers:
+        if t.capacity_bytes < 0:
+            raise MachineValidationError(
+                f"{model.name}/{t.name}: negative tier capacity")
+        if t.capacity_bytes > 0:        # zero-capacity = disabled level
+            if t.capacity_bytes < prev_cap:
+                raise MachineValidationError(
+                    f"{model.name}/{t.name}: tier capacities must be "
+                    f"non-decreasing outward")
+            prev_cap = t.capacity_bytes
+        if not (t.load_bw > 0 and t.store_bw > 0):
+            raise MachineValidationError(
+                f"{model.name}/{t.name}: tier bandwidths must be > 0")
+        if t.shared_bw < 0:
+            raise MachineValidationError(
+                f"{model.name}/{t.name}: negative shared_bw")
+        if not 0.0 <= t.wa_residue <= 1.0:
+            raise MachineValidationError(
+                f"{model.name}/{t.name}: wa_residue must be in [0, 1]")
+    if model.mem_tiers and \
+            model.mem_tiers[-1].capacity_bytes != float("inf"):
+        raise MachineValidationError(
+            f"{model.name}: outermost tier must have infinite capacity "
+            f"(the backing DRAM/HBM level)")
 
 
 def register(model: MachineModel, *, replace: bool = False) -> MachineModel:
@@ -145,10 +180,12 @@ def get_machine(machine) -> MachineModel:
 
 
 def registered_names() -> tuple:
+    """Names of every registered machine, in registration order."""
     return tuple(MACHINES)
 
 
 def registered_models() -> tuple:
+    """Every registered MachineModel, in registration order."""
     return tuple(MACHINES.values())
 
 
@@ -180,6 +217,7 @@ def _tpu_model(chip: ChipSpec, mxu_lat: float = 192.0) -> MachineModel:
         ports=mxus + vpus + vlsus + dmas + icis + sc, table=table, chip=chip,
         simd_width_bytes=BLOCK_BYTES, vendor="Google", isa_name="TPU",
         issue_width=0, wa_mode="auto_claim",
+        mem_tiers=tuple(chip.mem_tiers), cores=1,
         notes=f"{chip.n_mxu} MXU / {chip.n_vpu} VPU lanesets, "
               f"{chip.hbm_bw/1e9:.0f} GB/s HBM")
 
@@ -247,6 +285,7 @@ def _cpu_model(spec: CpuSpec) -> MachineModel:
         table=table, chip=None, simd_width_bytes=spec.simd_width_bytes,
         vendor=spec.vendor, isa_name=spec.isa,
         issue_width=spec.issue_width, wa_mode=spec.wa_mode,
+        mem_tiers=tuple(spec.mem_tiers), cores=spec.cores,
         notes=f"{spec.uarch}: {spec.n_fma}xFMA/{spec.n_simd}xSIMD "
               f"{spec.simd_width_bytes * 8}b, {spec.n_load}L/{spec.n_store}S, "
               f"{spec.mem_bw/1e9:.0f} GB/s socket")
@@ -265,12 +304,14 @@ for _m in (TPU_V5E, TPU_V5P, TPU_V4, ZEN4, GOLDEN_COVE, NEOVERSE_V2):
 del _m
 
 
-def host_cpu_model(calib: dict | None = None) -> MachineModel:
+def host_cpu_model(calib: dict | None = None,
+                   mem_tiers: tuple = ()) -> MachineModel:
     """Host-CPU machine model; entries overridden by ubench calibration.
 
     Units are normalized to a nominal 1 GHz clock so `cycles` == ns; the
     calibration dict maps class -> units/second measured on this host.
-    (repro.core.ubench builds this and registers it as `host_cpu`.)
+    ``mem_tiers`` is the measured cache ladder (repro.core.ubench builds
+    both and registers the result as `host_cpu`).
     """
     clock = 1e9
     default_rates = {           # units/s, conservative one-core defaults
@@ -292,4 +333,5 @@ def host_cpu_model(calib: dict | None = None) -> MachineModel:
              for cls, rate in default_rates.items()}
     return MachineModel(name="host_cpu", clock_hz=clock, ports=ports,
                         table=table, wa_mode="auto_claim",
+                        mem_tiers=tuple(mem_tiers), cores=1,
                         notes="ubench-calibrated host model")

@@ -52,6 +52,10 @@ def _is_mem_port(p: str) -> bool:
 
 @dataclasses.dataclass
 class Report:
+    """Result of analyzing one HLO module on one machine: TP/CP/LCD
+    cycles, per-port occupation, trip-multiplied traffic accounting,
+    and (once resolved) the memory-ladder fields."""
+
     tp_cycles: float              # max per-port occupation (incl. DMA/ICI)
     cp_cycles: float              # latency-critical path (in-core)
     serial_cycles: float          # sum of sequential loop floors
@@ -64,6 +68,12 @@ class Report:
     trips_seen: dict              # loop name -> trips
     loop_bytes: dict = dataclasses.field(default_factory=dict)
     # loop name -> (trips, bytes/iter, flops/iter) for bottleneck attribution
+    # memory-ladder resolution (filled by compare()/resolve_tiers — the
+    # analyzer itself is tier-agnostic): ECM memory term in seconds and
+    # the slowest / home tier of the module's traffic on this machine.
+    t_mem_tier: float | None = None
+    bottleneck_tier: str | None = None
+    home_tier: str | None = None
 
     @property
     def tp_incore_cycles(self) -> float:
@@ -80,15 +90,30 @@ class Report:
 
     @property
     def bound_incore_cycles(self) -> float:
+        """In-core bound: TP without memory ports vs the loop floors."""
         return max(self.tp_incore_cycles, self.serial_cycles)
 
     def seconds(self, machine: MachineModel) -> float:
+        """Full ECM-style bound (all ports + loop floors) in seconds."""
         return self.bound_cycles / machine.clock_hz
 
     def seconds_incore(self, machine: MachineModel) -> float:
+        """In-core bound (operands resident; no memory ports) in seconds."""
         return self.bound_incore_cycles / machine.clock_hz
 
+    def tier_bound_seconds(self, machine: MachineModel) -> float:
+        """Tier-resolved bound: in-core time vs the memory-ladder term.
+
+        Falls back to the flat port-model bound when the tier fields
+        have not been resolved (see `resolve_tiers`).
+        """
+        if self.t_mem_tier is None:
+            return self.seconds(machine)
+        return max(self.seconds_incore(machine), self.t_mem_tier)
+
     def bottleneck(self) -> str:
+        """Dominant limiter: the busiest port, or 'LCD(serial)' when
+        the sequential loop floors exceed every port."""
         if not self.port_occupation:
             return "none"
         if self.serial_cycles > self.tp_cycles:
@@ -109,10 +134,12 @@ class Analyzer:
 
     # -- public ------------------------------------------------------------
     def analyze_text(self, hlo_text: str) -> Report:
+        """Parse (memoized) and analyze one compiled HLO text."""
         mod, trips = _parse_cached(hlo_text)
         return self.analyze_module(mod, trips)
 
     def analyze_module(self, mod: HloModule, trips: dict) -> Report:
+        """Analyze an already-parsed module with explicit trip counts."""
         acc = _Acc()
         self._comp(mod, mod.entry, trips, acc, mult=1.0)
         tp = max(acc.ports.values()) if acc.ports else 0.0
@@ -403,7 +430,29 @@ def _parse_cached(hlo_text: str) -> tuple:
 
 
 def analyze(hlo_text: str, machine, n_devices: int = 1) -> Report:
+    """Analyze one HLO text on one machine (name or MachineModel)."""
     return Analyzer(machine, n_devices).analyze_text(hlo_text)
+
+
+def resolve_tiers(report: Report, machine) -> Report:
+    """Fill a report's memory-ladder fields against one machine.
+
+    Resolves the report's trip-multiplied HBM/DRAM traffic through the
+    machine's MemTier ladder (core/memtier.py) and writes `t_mem_tier`,
+    `bottleneck_tier`, and `home_tier` in place (returning the report
+    for chaining). The working set is approximated by the traffic
+    itself — whole-module analyses land on the backing tier, which is
+    the flat pre-ladder behaviour.
+    """
+    from repro.core import memtier  # local: memtier imports machine too
+
+    model = get_machine(machine)
+    res = memtier.memory_seconds(model, report.bytes_hbm,
+                                 cores_active=model.cores or 1)
+    report.t_mem_tier = res.seconds
+    report.bottleneck_tier = res.bottleneck_tier
+    report.home_tier = res.home
+    return report
 
 
 def compare(hlo_text: str, machines=None, n_devices: int = 1,
@@ -415,8 +464,11 @@ def compare(hlo_text: str, machines=None, n_devices: int = 1,
     read-only by all analyses, which fan out on a thread pool — each
     Analyzer only mutates its own accumulator. (The analyses are pure
     Python, so the pool buys overlap only where the GIL is released; the
-    single shared parse is the main saving.) Returns
-    {machine name: Report} preserving the requested order.
+    single shared parse is the main saving.) Every report comes back
+    with its memory-ladder fields resolved (`resolve_tiers`), so callers
+    can read the tier-resolved bound (`Report.tier_bound_seconds`) and
+    bottleneck tier directly. Returns {machine name: Report} preserving
+    the requested order.
     """
     if machines is None:
         machines = registered_names()
@@ -424,7 +476,8 @@ def compare(hlo_text: str, machines=None, n_devices: int = 1,
     mod, trips = _parse_cached(hlo_text)
 
     def run(model):
-        return Analyzer(model, n_devices).analyze_module(mod, trips)
+        rep = Analyzer(model, n_devices).analyze_module(mod, trips)
+        return resolve_tiers(rep, model)
 
     workers = max_workers or min(8, max(1, len(models)))
     with ThreadPoolExecutor(max_workers=workers) as ex:

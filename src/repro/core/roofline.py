@@ -1,9 +1,14 @@
 """§Roofline: three-term analysis of every compiled dry-run cell.
 
     compute term    = HLO_FLOPs / (chips x peak FLOP/s)
-    memory term     = HLO_bytes / (chips x HBM bw)   [WA/RMW-adjusted]
+    memory term     = tier-resolved ECM ladder term [WA/RMW-adjusted]
     collective term = wire bytes / (chips x ICI bw)
 
+The memory term is no longer a flat ``bytes / HBM_BW``: the WA-adjusted
+traffic is resolved against the machine's memory ladder
+(core/memtier.py), which degrades to exactly the flat HBM number for
+working sets that resolve to the backing tier (the common case for
+whole-model dry runs) but correctly credits VMEM/cache-resident cells.
 Numbers come from the port-model analyzer's trip-multiplied accounting
 (XLA's cost_analysis visits while bodies once — see portmodel.py); raw
 cost_analysis values are kept alongside for the naive-baseline comparison.
@@ -16,13 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import portmodel
+from repro.core import memtier, portmodel
 from repro.core.machine import MACHINES, MachineModel
-from repro.utils.hw import PEAK_FLOPS, HBM_BW, ICI_BW
+from repro.utils.hw import PEAK_FLOPS, ICI_BW
 
 
 @dataclasses.dataclass
 class RooflineCell:
+    """Roofline terms + accounting for one (arch, shape, mesh) cell."""
+
     arch: str
     shape: str
     mesh: str
@@ -44,9 +51,13 @@ class RooflineCell:
     bottleneck_port: str
     peak_fraction: float          # (model_flops/chips/peak) / bound
     notes: str = ""
+    # memory-ladder resolution (core/memtier.py)
+    bottleneck_tier: str = "HBM"  # slowest transfer leg of the ladder
+    home_tier: str = "HBM"        # tier the working set resolves to
 
     @property
     def bound(self) -> float:
+        """The roofline bound: slowest of the three terms."""
         return max(self.t_compute, self.t_memory, self.t_collective)
 
 
@@ -101,7 +112,14 @@ def analyze_cell(rec: dict, cfg, shape, hlo_text: str | None = None,
 
     wa_ratio = rec.get("wa_ratio", 1.0)
     t_c = flops / PEAK_FLOPS
-    t_m = bytes_hbm * wa_ratio / HBM_BW
+    # tier-resolved memory term: the record's WA ratio is already folded
+    # into the traffic (store_frac=0 keeps the ladder from re-applying
+    # its own per-tier WA model on top). The working set is the traffic
+    # itself — an upper bound that resolves whole-module cells to the
+    # backing HBM/DRAM tier, where this degrades to bytes * wa / bw.
+    res = memtier.memory_seconds(machine, bytes_hbm * wa_ratio,
+                                 store_frac=0.0)
+    t_m = res.seconds
     t_x = collective_seconds(coll)
     terms = {"compute": t_c, "memory": t_m, "collective": t_x}
     if t_port > t_c and t_port >= max(t_m, t_x):
@@ -119,18 +137,21 @@ def analyze_cell(rec: dict, cfg, shape, hlo_text: str | None = None,
         t_compute_port=t_port, dominant=dominant, flops=flops,
         bytes_hbm=bytes_hbm, coll_bytes=dict(coll), wa_ratio=wa_ratio,
         model_flops=mf, useful_ratio=useful, bottleneck_port=port,
-        peak_fraction=ideal / bound if bound > 0 else 0.0)
+        peak_fraction=ideal / bound if bound > 0 else 0.0,
+        bottleneck_tier=res.bottleneck_tier, home_tier=res.home)
 
 
 def to_markdown(cells: list) -> str:
+    """Render roofline cells as a GitHub-flavored markdown table."""
     hdr = ("| arch | shape | mesh | T_comp | T_comp(port) | T_mem | T_coll "
-           "| dominant | MF/HLO | peak-frac |\n"
-           "|---|---|---|---|---|---|---|---|---|---|\n")
+           "| dominant | tier | MF/HLO | peak-frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
     rows = []
     for c in cells:
         rows.append(
             f"| {c.arch} | {c.shape} | {c.mesh} | {c.t_compute*1e3:.2f}ms "
             f"| {c.t_compute_port*1e3:.2f}ms | {c.t_memory*1e3:.2f}ms "
             f"| {c.t_collective*1e3:.2f}ms | {c.dominant} "
+            f"| {c.bottleneck_tier} "
             f"| {c.useful_ratio:.2f} | {c.peak_fraction:.1%} |")
     return hdr + "\n".join(rows)

@@ -57,6 +57,7 @@ def _dims3(n):
 
 
 def make_inputs(kernel: str, n: int, dtype=jnp.float32):
+    """Deterministic input arrays for one suite kernel at size n."""
     key = jax.random.PRNGKey(42)
     ks = jax.random.split(key, 3)
     if kernel in ("jacobi_2d5pt", "gauss_seidel_2d5pt"):
@@ -74,6 +75,7 @@ def make_inputs(kernel: str, n: int, dtype=jnp.float32):
 
 
 def base_fn(kernel: str, n: int):
+    """The reference (unjitted) callable for one suite kernel."""
     if kernel == "init":
         return lambda: R.init((n,))
     if kernel == "pi_integration":
@@ -145,6 +147,12 @@ def build_variant(kernel: str, variant: str, n: int):
 
 def measure(fn, args, reps: int = 5, inner: int = 3,
             consumes_args: bool = False) -> float:
+    """Best-of-`reps` wall time of one jitted call (seconds).
+
+    `consumes_args` handles donated buffers: they are dead after one
+    call, so fresh clones are made outside the timed region and the
+    inner-loop amortization is skipped.
+    """
     if consumes_args:
         # donated buffers are dead after one call: re-clone outside timing
         best = float("inf")
@@ -170,6 +178,8 @@ def measure(fn, args, reps: int = 5, inner: int = 3,
 
 @dataclasses.dataclass
 class RpeRecord:
+    """One Fig. 3 data point: measured vs both predicted runtimes."""
+
     kernel: str
     variant: str
     size: str
@@ -179,10 +189,12 @@ class RpeRecord:
 
     @property
     def rpe_port(self) -> float:
+        """Relative prediction error of the port model (+ = under)."""
         return (self.t_meas - self.t_port) / self.t_meas
 
     @property
     def rpe_naive(self) -> float:
+        """Relative prediction error of the naive baseline (+ = under)."""
         return (self.t_meas - self.t_naive) / self.t_meas
 
 
@@ -227,6 +239,7 @@ def save_records(records: list, path: str) -> None:
 
 
 def run_block(kernel: str, variant: str, size: str) -> RpeRecord:
+    """Measure + model one (kernel, variant, size) block on the host."""
     from repro.core.ubench import tier_bw
     n = SIZES[size]
     fn, args = build_variant(kernel, variant, n)
@@ -247,6 +260,7 @@ def run_block(kernel: str, variant: str, size: str) -> RpeRecord:
 
 def run_suite(kernels=None, variants=VARIANTS, sizes=tuple(SIZES),
               progress=None) -> list:
+    """Run the whole Fig. 3 grid; failures become NaN records."""
     kernels = kernels or R.KERNELS_13
     out = []
     for k in kernels:
@@ -263,6 +277,7 @@ def run_suite(kernels=None, variants=VARIANTS, sizes=tuple(SIZES),
 
 
 def summarize(records: list) -> dict:
+    """Fig. 3 summary stats per model (NaN-safe; see DESIGN.md §7)."""
     def stats(rpes):
         r = np.array([x for x in rpes if np.isfinite(x)])
         if r.size == 0:

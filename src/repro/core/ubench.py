@@ -20,11 +20,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.machine import MachineModel, host_cpu_model, register
+from repro.utils.hw import MemTier
 
 N_SMALL = 8192             # 32 KiB f32 — L1/L2-resident (in-core regime)
 N_BIG = 1 << 23            # 32 MiB — memory regime (DMA class)
 MAT = 512
 K_CHAIN = 256
+
+#: (tier name, elements, declared capacity) for the cache-ladder sweep.
+#: Working sets are sized to sit comfortably inside each level on any
+#: recent x86/ARM host; the declared capacity is what the resolved
+#: MemTier publishes (the level boundary, not the probe size).
+TIER_PROBES = (
+    ("L1", 1 << 13, 128e3),      # 32 KiB probe in a <=128 KiB L1
+    ("L2", 1 << 16, 2e6),        # 256 KiB probe in a <=2 MiB L2
+    ("L3", 1 << 20, 24e6),       # 4 MiB probe in a <=24 MiB L3 slice
+)
 
 
 def _chain(op, n_iter):
@@ -48,6 +59,12 @@ def _timeit(fn, *args, reps: int = 5) -> float:
 
 
 def measure_host_rates(n: int = N_SMALL) -> dict:
+    """Measure per-class unit rates + the cache ladder on this host.
+
+    Returns {µ-op class: units/second} ready for `host_cpu_model`, plus
+    a `_raw` sub-dict with the underlying timings, peak numbers, and
+    the measured `mem_tiers` MemTier ladder.
+    """
     key = jax.random.PRNGKey(0)
     a = jnp.abs(jax.random.normal(key, (n,), jnp.float32)) + 0.5
     b = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,),
@@ -68,16 +85,35 @@ def measure_host_rates(n: int = N_SMALL) -> dict:
     t_cp = _timeit(jax.jit(lambda x: x + 0.0), big)
     t_tr = _timeit(jax.jit(lambda x, y: x + 2.0 * y), big, big * 0.5)
 
-    # memory-tier bandwidths (ECM): chained add at tiered working sets
+    # memory-tier calibration (ECM ladder): a chained streaming add
+    # (2 reads + 1 write per element) at per-level working sets gives
+    # each level's combined sustained bandwidth; loads and stores split
+    # it 2:1, matching the kernel's access mix. The measured rates
+    # already include whatever write-allocate traffic the host really
+    # generates, so the resolved tiers carry wa_residue=0 — charging a
+    # modeled allocate on top would double-count it (core/memtier.py).
     tiers = []
-    for n_t, cap in ((1 << 13, 128e3), (1 << 16, 2e6), (1 << 20, 24e6)):
+    for tname, n_t, cap in TIER_PROBES:
         at = jnp.abs(jax.random.normal(key, (n_t,), jnp.float32)) + 0.5
         bt = at * 0.5
         reps = max(16, K_CHAIN // max(1, n_t // 8192))
         t = _timeit(_chain(lambda x, c: x + c, reps), at, bt) / reps
-        tiers.append((cap, 3 * 4 * n_t / t))   # 2 reads + 1 write
+        bw = 3 * 4 * n_t / t                   # 2 reads + 1 write
+        tiers.append(MemTier(tname, cap, load_bw=bw * 2 / 3,
+                             store_bw=bw / 3, shared_bw=0.0,
+                             wa_residue=0.0))
     dram_bw = max(2 * 4 * N_BIG / t_cp, 3 * 4 * N_BIG / t_tr)
-    tiers.append((float("inf"), dram_bw))
+    tiers.append(MemTier("DRAM", float("inf"), load_bw=dram_bw * 2 / 3,
+                         store_bw=dram_bw / 3, shared_bw=dram_bw,
+                         wa_residue=0.0))
+    # drop inverted levels (noisy containers can measure an outer level
+    # faster than an inner one): keep the ladder monotone in bandwidth
+    mono = []
+    for t in tiers:
+        while mono and mono[-1].load_bw < t.load_bw:
+            mono.pop()
+        mono.append(t)
+    tiers = mono
 
     blocks = n / (8 * 128)
     mxu_passes = (MAT / 128) ** 3
@@ -104,11 +140,15 @@ _CAL_CACHE: dict = {}
 
 def calibrated_host_model(refresh: bool = False) -> MachineModel:
     """Measure this host and publish the result into the machine registry
-    (as `host_cpu`), so compare()/Analyzer can address it by name."""
+    (as `host_cpu`), so compare()/Analyzer can address it by name. The
+    registered model carries the measured MemTier cache ladder, so the
+    tier resolver (core/memtier.py) works on `host_cpu` like on the
+    paper CPUs."""
     if "model" not in _CAL_CACHE or refresh:
         rates = measure_host_rates()
         raw = rates.pop("_raw")
-        m = register(host_cpu_model(rates), replace=True)
+        m = register(host_cpu_model(rates, mem_tiers=raw["mem_tiers"]),
+                     replace=True)
         _CAL_CACHE["model"] = m
         _CAL_CACHE["raw"] = raw
     return _CAL_CACHE["model"]
@@ -121,14 +161,19 @@ def host_peaks() -> tuple:
     return raw["flops_matmul"], raw["stream_bw"]
 
 
-def mem_tiers() -> list:
-    """[(capacity_bytes, bytes/s)] ECM memory tiers, DRAM last."""
-    calibrated_host_model()
-    return _CAL_CACHE["raw"]["mem_tiers"]
+def mem_tiers() -> tuple:
+    """Measured MemTier ladder of this host, innermost first, DRAM last."""
+    return tuple(calibrated_host_model().mem_tiers)
 
 
 def tier_bw(ws_bytes: float) -> float:
-    for cap, bw in mem_tiers():
-        if ws_bytes <= cap:
-            return bw
-    return mem_tiers()[-1][1]
+    """Combined sustained bytes/s at the tier a working set resolves to.
+
+    Kept as the historical scalar interface (rpe.py's ECM memory term,
+    examples/quickstart.py); resolution semantics are memtier's
+    (`resolve_home`), per-leg composition lives in
+    `repro.core.memtier.transfer_time`.
+    """
+    from repro.core import memtier
+    t = memtier.resolve_home(mem_tiers(), ws_bytes)
+    return t.load_bw + t.store_bw

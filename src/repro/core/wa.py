@@ -18,7 +18,10 @@ This module provides:
                           provably overwritten
      - saturation_gated  (SPR SpecI2M): evasion only on the fraction of
                           stores issued while the memory interface is
-                          >= `gate` saturated; NT stores leave ~10% residue
+                          >= `gate` saturated — the gate is modeled from
+                          the machine's memory ladder (core/memtier.py)
+                          when a working-set size is supplied; NT stores
+                          leave ~10% residue
      - explicit_only     (Zen 4): standard stores always allocate;
                           NT stores evade fully
  * module-level scan: WA-adjusted store traffic for a parsed HLO module.
@@ -34,6 +37,8 @@ from repro.utils.hw import dtype_bytes
 
 
 def native_tile(dtype: str) -> tuple:
+    """The (sublane, lane) HBM tile granule for a dtype (packed for
+    sub-32-bit types: bf16 -> (16,128), int8 -> (32,128))."""
     packing = {"f32": 1, "s32": 1, "u32": 1,
                "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
                "s8": 4, "u8": 4, "f8e4m3fn": 4, "f8e5m2": 4}.get(dtype, 1)
@@ -42,17 +47,20 @@ def native_tile(dtype: str) -> tuple:
 
 @dataclasses.dataclass(frozen=True)
 class StoreProfile:
+    """Tile-level classification of one store region (RMW accounting)."""
+
     stored_bytes: float           # payload the program wants to write
     rmw_read_bytes: float         # extra reads forced by partial tiles
     copy_bytes: float = 0.0       # whole-buffer copies (missing donation)
 
     @property
     def traffic(self) -> float:
-        # write + forced reads + copy (read+write)
+        """Total memory traffic: write + forced reads + copy (r+w)."""
         return self.stored_bytes + self.rmw_read_bytes + 2 * self.copy_bytes
 
     @property
     def ratio(self) -> float:
+        """Traffic / stored payload (1.0 = perfect, 2.0 = full WA)."""
         return self.traffic / max(self.stored_bytes, 1.0)
 
 
@@ -106,21 +114,36 @@ def store_profile(shape_dims: tuple, dtype: str, *,
 
 def machine_traffic_ratio(mode: str, *, nt_stores: bool = False,
                           bw_utilization: float = 1.0,
-                          tile_full_frac: float = 1.0) -> float:
+                          tile_full_frac: float = 1.0,
+                          residue: float | None = None) -> float:
     """Memory-traffic / stored-data ratio for a store-only kernel.
 
     Mirrors Fig. 4: 1.0 = perfect WA evasion, 2.0 = full write-allocate.
+
+    ``residue`` is the per-tier WA-evasion residue from the memory
+    ladder (`MemTier.wa_residue`, core/memtier.py): the allocate-read
+    fraction surviving the machine's evasion mechanism at one tier
+    boundary. When omitted, the legacy Fig. 4 calibration constants
+    apply (auto-claim 0, SpecI2M/NT ~0.1, NT-on-Zen4 0, and a
+    conservative 0.25 maximum SpecI2M evasion for standard stores).
     """
     partial_extra = 1.0 - tile_full_frac          # RMW share from tiling
     if mode == "auto_claim":            # Grace & TPU
-        return 1.0 + partial_extra
+        return 1.0 + (residue or 0.0) + partial_extra
     if mode == "saturation_gated":      # Sapphire Rapids SpecI2M
         if nt_stores:
-            return 1.1 + partial_extra  # residual ~10% (paper Fig. 4)
-        evade = 0.25 * max(0.0, min(1.0, (bw_utilization - 0.5) / 0.5))
+            # residual allocate traffic (~10% in the paper's Fig. 4)
+            return 1.0 + (0.1 if residue is None else residue) \
+                + partial_extra
+        gate = max(0.0, min(1.0, (bw_utilization - 0.5) / 0.5))
+        # evasion depth at full gate: legacy 0.25, or down to the
+        # tier's residue when the ladder supplies one
+        evade = gate * (0.25 if residue is None else 1.0 - residue)
         return 2.0 - evade + partial_extra
     if mode == "explicit_only":         # Zen 4
-        return (1.0 if nt_stores else 2.0) + partial_extra
+        if nt_stores:
+            return 1.0 + (residue or 0.0) + partial_extra
+        return 2.0 + partial_extra      # standard stores always allocate
     raise ValueError(mode)
 
 
@@ -138,17 +161,45 @@ def wa_mode_of(machine) -> str:
     return getattr(machine, "wa_mode", "") or "auto_claim"
 
 
+def modeled_saturation_for(machine, ws_bytes: float,
+                           cores_active: int | None = None) -> float:
+    """Ladder-modeled interface saturation for a working set, 0..1.
+
+    Thin forwarding wrapper over `memtier.modeled_saturation` (imported
+    lazily — memtier imports this module for the Fig. 4 ratio model).
+    """
+    from repro.core import memtier
+    return memtier.modeled_saturation(machine, ws_bytes, cores_active)
+
+
 def traffic_ratio_for(machine, *, nt_stores: bool = False,
-                      bw_utilization: float = 1.0,
-                      tile_full_frac: float = 1.0) -> float:
-    """`machine_traffic_ratio` with the mode taken from the machine tag."""
+                      bw_utilization: float | None = None,
+                      tile_full_frac: float = 1.0,
+                      ws_bytes: float | None = None,
+                      cores_active: int | None = None) -> float:
+    """`machine_traffic_ratio` with the mode taken from the machine tag.
+
+    The SpecI2M saturation gate is no longer a caller-supplied constant:
+    pass ``ws_bytes`` (and optionally ``cores_active``) and the gate is
+    *modeled* from the machine's memory ladder — the home tier of the
+    working set must actually saturate its shared interface for the
+    evasion to engage. An explicit ``bw_utilization`` still overrides
+    (sweeps like benchmarks/fig4_wa.py plot against it); with neither
+    supplied, full saturation is assumed (the legacy default).
+    """
+    if bw_utilization is None:
+        bw_utilization = (modeled_saturation_for(machine, ws_bytes,
+                                                 cores_active)
+                          if ws_bytes is not None else 1.0)
     return machine_traffic_ratio(wa_mode_of(machine), nt_stores=nt_stores,
                                  bw_utilization=bw_utilization,
                                  tile_full_frac=tile_full_frac)
 
 
 def apply_wa_mode(scan: dict, machine, *, nt_stores: bool = False,
-                  bw_utilization: float = 1.0) -> dict:
+                  bw_utilization: float | None = None,
+                  ws_bytes: float | None = None,
+                  cores_active: int | None = None) -> dict:
     """Apply one machine's WA mode to a (machine-independent) store scan.
 
     `scan` is an `analyze_module_stores` result. The scan's RMW reads
@@ -163,7 +214,8 @@ def apply_wa_mode(scan: dict, machine, *, nt_stores: bool = False,
     full_frac = 1.0 - scan["rmw_read_bytes"] / stored if stored > 0 else 1.0
     ratio = traffic_ratio_for(machine, nt_stores=nt_stores,
                               bw_utilization=bw_utilization,
-                              tile_full_frac=full_frac)
+                              tile_full_frac=full_frac,
+                              ws_bytes=ws_bytes, cores_active=cores_active)
     out = dict(scan)
     out["wa_mode"] = wa_mode_of(machine)
     out["tile_wa_ratio"] = scan.get("wa_ratio")
@@ -175,19 +227,24 @@ def apply_wa_mode(scan: dict, machine, *, nt_stores: bool = False,
 
 
 def machine_store_traffic(hlo, machine, *, nt_stores: bool = False,
-                          bw_utilization: float = 1.0) -> dict:
+                          bw_utilization: float | None = None,
+                          ws_bytes: float | None = None,
+                          cores_active: int | None = None) -> dict:
     """WA-adjusted store traffic of one module on one machine.
 
     Combines the tile-level module scan (which stores exist, and what
     fraction overwrites full tiles) with the machine's behavioural mode
-    (what a partial-tile / missed store costs there). When comparing
-    many machines on one module, run the scan once and call
-    `apply_wa_mode` per machine instead.
+    (what a partial-tile / missed store costs there). Pass ``ws_bytes``
+    to let the memory ladder model the SpecI2M saturation gate instead
+    of assuming full saturation. When comparing many machines on one
+    module, run the scan once and call `apply_wa_mode` per machine
+    instead.
     """
     base = analyze_module_stores(hlo) if isinstance(hlo, HloModule) \
         else analyze_text_stores(hlo)
     return apply_wa_mode(base, machine, nt_stores=nt_stores,
-                         bw_utilization=bw_utilization)
+                         bw_utilization=bw_utilization,
+                         ws_bytes=ws_bytes, cores_active=cores_active)
 
 
 # --- module-level scan ------------------------------------------------------
@@ -252,4 +309,5 @@ def analyze_module_stores(mod: HloModule) -> dict:
 
 
 def analyze_text_stores(hlo_text: str) -> dict:
+    """`analyze_module_stores` straight from compiled HLO text."""
     return analyze_module_stores(parse_hlo(hlo_text))

@@ -10,6 +10,45 @@ roofline terms:
 from __future__ import annotations
 
 import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class MemTier:
+    """One level of a machine's memory hierarchy (ECM-style tier).
+
+    Capacities are the working-set capacity *visible from one core* (the
+    classic cache-ladder x-axis): private L1/L2 capacity for the private
+    tiers, the shared slice a single core can realistically occupy for
+    L3/SLC, and ``inf`` for DRAM/HBM. Bandwidths are single-core
+    sustained rates; ``shared_bw`` is the socket-level ceiling for
+    shared tiers (0.0 marks a private tier whose aggregate bandwidth
+    scales linearly with active cores).
+
+    ``wa_residue`` parametrizes write-allocate evasion quality at this
+    tier boundary, after the CloverLeaf WA-evasion study (arXiv:
+    2311.04797): the fraction of allocate-read traffic that *remains*
+    when the machine's evasion mechanism (cache-line claim, SpecI2M, NT
+    stores) engages for stores homed here. 1.0 = no mechanism operates
+    at this boundary; 0.0 = perfect evasion.
+    """
+
+    name: str                  # "L1" / "L2" / "L3" / "DRAM" / "VMEM"...
+    capacity_bytes: float      # working-set capacity seen from one core
+    load_bw: float             # bytes/s, single-core sustained load
+    store_bw: float            # bytes/s, single-core sustained store
+    shared_bw: float = 0.0     # socket ceiling; 0.0 = private tier
+    wa_residue: float = 1.0    # allocate fraction left under evasion
+
+
+def _cache_ladder(clock_hz: float, levels: tuple) -> tuple:
+    """Build a MemTier ladder from per-level (name, capacity, load B/cy,
+    store B/cy, shared GB/s or 0, wa_residue) rows at a fixed clock."""
+    return tuple(
+        MemTier(name=n, capacity_bytes=float(cap),
+                load_bw=ld * clock_hz, store_bw=st * clock_hz,
+                shared_bw=sh * 1e9, wa_residue=res)
+        for (n, cap, ld, st, sh, res) in levels)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +69,23 @@ class ChipSpec:
     n_mxu: int                 # 128x128 systolic arrays per core
     n_vpu: int                 # (8,128) vector ALU lanesets usable per cycle
     native_tile: tuple = (8, 128)  # tile granule (fp32 sublane x lane)
+    mem_tiers: tuple = ()      # MemTier ladder (VMEM -> HBM), inner first
+
+
+def _tpu_tiers(vmem_bytes: float, hbm_bw: float) -> tuple:
+    """VMEM + HBM ladder for a TPU chip.
+
+    VMEM feeds the compute units at roughly an order of magnitude above
+    HBM (it backs every VPU operand fetch); HBM is the DMA-visible tier.
+    Both claim full tiles on store (the Grace-like `auto_claim`
+    behaviour, DESIGN.md §2), so the WA residue is 0 at both tiers.
+    """
+    return (
+        MemTier("VMEM", float(vmem_bytes), 10.0 * hbm_bw, 10.0 * hbm_bw,
+                shared_bw=10.0 * hbm_bw, wa_residue=0.0),
+        MemTier("HBM", math.inf, hbm_bw, hbm_bw,
+                shared_bw=hbm_bw, wa_residue=0.0),
+    )
 
 
 # TPU v5e — the assignment's target chip. 197 bf16 TFLOP/s at ~0.94 GHz
@@ -48,6 +104,7 @@ TPU_V5E = ChipSpec(
     clock_hz=1.5e9,   # modeled: 4 MXU * 128*128*2 * 1.5e9 = 196.6e12
     n_mxu=4,
     n_vpu=8,
+    mem_tiers=_tpu_tiers(128 * 2**20, 819e9),
 )
 
 # TPU v5p — the "Sapphire Rapids" of the comparison: widest compute.
@@ -63,6 +120,7 @@ TPU_V5P = ChipSpec(
     clock_hz=1.75e9,  # modeled: 8 MXU * 128*128*2 * 1.75e9 ≈ 459e12
     n_mxu=8,
     n_vpu=16,
+    mem_tiers=_tpu_tiers(128 * 2**20, 2765e9),
 )
 
 # TPU v4 — previous generation baseline.
@@ -78,6 +136,7 @@ TPU_V4 = ChipSpec(
     clock_hz=1.05e9,  # modeled: 8 MXU * 128*128*2 * 1.05e9 ≈ 275e12
     n_mxu=8,
     n_vpu=16,
+    mem_tiers=_tpu_tiers(128 * 2**20, 1228e9),
 )
 
 CHIPS = {c.name: c for c in (TPU_V5E, TPU_V5P, TPU_V4)}
@@ -114,6 +173,7 @@ class CpuSpec:
     xsocket_bw: float          # bytes/s cross-socket/C2C link
     cores: int                 # cores per socket
     wa_mode: str               # write-allocate behaviour (core/wa.py)
+    mem_tiers: tuple = ()      # MemTier cache ladder, L1 first, DRAM last
 
 
 # AMD Genoa / Zen 4 (EPYC 9654). 6-wide; 4 FP pipes of which FP0/FP1 are
@@ -127,6 +187,15 @@ ZEN4 = CpuSpec(
     fdiv_recip_tput=6.5, fdiv_latency=13.0,
     l1d_bytes=32 * 1024, mem_bw=460.8e9, xsocket_bw=50e9, cores=96,
     wa_mode="explicit_only",
+    # Cache ladder (B/cy single core at 2.4 GHz; shared GB/s socket).
+    # Standard stores write-allocate at every boundary (residue 1.0);
+    # only explicit NT stores evade, fully, at the DRAM interface.
+    mem_tiers=_cache_ladder(2.4e9, (
+        ("L1", 32 * 1024, 64.0, 32.0, 0.0, 1.0),
+        ("L2", 1 * 2**20, 32.0, 32.0, 0.0, 1.0),
+        ("L3", 32 * 2**20, 24.0, 20.0, 1380.0, 1.0),   # one CCD slice
+        ("DRAM", math.inf, 16.0, 10.0, 460.8, 0.0),    # NT: full evasion
+    )),
 )
 
 # Intel Sapphire Rapids / Golden Cove (Xeon 8470). 6-wide; with AVX-512
@@ -141,6 +210,14 @@ GOLDEN_COVE = CpuSpec(
     fdiv_recip_tput=8.0, fdiv_latency=16.0,
     l1d_bytes=48 * 1024, mem_bw=307.2e9, xsocket_bw=48e9, cores=52,
     wa_mode="saturation_gated",
+    # SpecI2M operates only at the memory interface and leaves ~10% of
+    # the allocate traffic behind even when fully engaged (Fig. 4).
+    mem_tiers=_cache_ladder(2.0e9, (
+        ("L1", 48 * 1024, 128.0, 64.0, 0.0, 1.0),
+        ("L2", 2 * 2**20, 64.0, 48.0, 0.0, 1.0),
+        ("L3", 105 * 2**20, 20.0, 12.0, 900.0, 1.0),   # mesh-limited
+        ("DRAM", math.inf, 15.0, 10.0, 307.2, 0.1),    # SpecI2M residue
+    )),
 )
 
 # NVIDIA Grace / Neoverse V2. 8-wide; 4x128-bit SIMD pipes V0..V3, all
@@ -154,6 +231,15 @@ NEOVERSE_V2 = CpuSpec(
     fdiv_recip_tput=7.0, fdiv_latency=15.0,
     l1d_bytes=64 * 1024, mem_bw=500e9, xsocket_bw=450e9, cores=72,
     wa_mode="auto_claim",
+    # The cache claims lines on store misses at every level, so the WA
+    # residue is 0 at every tier boundary — the paper's "next-to-
+    # optimal automatic WA evasion".
+    mem_tiers=_cache_ladder(3.4e9, (
+        ("L1", 64 * 1024, 48.0, 32.0, 0.0, 0.0),
+        ("L2", 1 * 2**20, 32.0, 24.0, 0.0, 0.0),
+        ("L3", 114 * 2**20, 16.0, 12.0, 1100.0, 0.0),  # SLC
+        ("DRAM", math.inf, 15.0, 11.0, 500.0, 0.0),    # LPDDR5X
+    )),
 )
 
 CPU_CHIPS = {c.name: c for c in (ZEN4, GOLDEN_COVE, NEOVERSE_V2)}

@@ -1,0 +1,242 @@
+"""Tests for the multi-tier memory-hierarchy model (core/memtier.py).
+
+Covers tier resolution at capacity boundaries, zero-capacity (disabled)
+tiers, per-mode WA residue across every registered machine, ladder
+validation, and the fig5 cache-ladder regression (Grace <= SPR <= Zen 4
+WA-adjusted store traffic at every tier).
+"""
+
+import math
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import memtier, wa
+from repro.core.machine import (MACHINES, MachineValidationError,
+                                MachineModel, OpEntry, get_machine,
+                                validate_model)
+from repro.utils.hw import CPU_CHIPS, MemTier
+
+PAPER_CPUS = ("zen4", "golden_cove", "neoverse_v2")
+
+
+def _ladder(*rows):
+    return tuple(MemTier(*r) for r in rows)
+
+
+SIMPLE = _ladder(
+    ("L1", 32e3, 100e9, 50e9, 0.0, 1.0),
+    ("L2", 1e6, 50e9, 25e9, 0.0, 1.0),
+    ("DRAM", math.inf, 20e9, 10e9, 200e9, 0.5),
+)
+
+
+# --- resolution ------------------------------------------------------------
+
+def test_boundary_working_sets_resolve_inclusive():
+    # exactly at capacity -> still the inner tier; one byte over -> next
+    assert memtier.resolve_home(SIMPLE, 32e3).name == "L1"
+    assert memtier.resolve_home(SIMPLE, 32e3 + 1).name == "L2"
+    assert memtier.resolve_home(SIMPLE, 1e6).name == "L2"
+    assert memtier.resolve_home(SIMPLE, 1e6 + 1).name == "DRAM"
+    assert memtier.resolve_home(SIMPLE, 1e15).name == "DRAM"
+
+
+def test_ladder_includes_all_legs_down_to_home():
+    assert [t.name for t in memtier.ladder(SIMPLE, 1e3)] == ["L1"]
+    assert [t.name for t in memtier.ladder(SIMPLE, 5e5)] == ["L1", "L2"]
+    assert [t.name for t in memtier.ladder(SIMPLE, 1e9)] == \
+        ["L1", "L2", "DRAM"]
+
+
+def test_zero_capacity_tiers_are_skipped():
+    tiers = _ladder(
+        ("L1", 32e3, 100e9, 50e9, 0.0, 1.0),
+        ("L2", 0.0, 50e9, 25e9, 0.0, 1.0),          # disabled level
+        ("DRAM", math.inf, 20e9, 10e9, 200e9, 0.5),
+    )
+    assert memtier.resolve_home(tiers, 64e3).name == "DRAM"
+    assert [t.name for t in memtier.ladder(tiers, 64e3)] == ["L1", "DRAM"]
+
+
+def test_all_zero_tiers_raise():
+    tiers = _ladder(("L1", 0.0, 1e9, 1e9, 0.0, 1.0))
+    with pytest.raises(ValueError):
+        memtier.resolve_home(tiers, 1.0)
+
+
+def test_every_registered_machine_has_a_resolvable_ladder():
+    for name, m in MACHINES.items():
+        tiers = memtier.tiers_of(m)
+        assert tiers, name
+        assert tiers[-1].capacity_bytes == math.inf, name
+        res = memtier.transfer_time(m, ws_bytes=1e9, load_bytes=1e9,
+                                    store_bytes=1e9)
+        assert res.seconds > 0, name
+        assert res.home == tiers[-1].name, name
+
+
+def test_machines_without_tiers_get_flat_dram_fallback():
+    bare = MachineModel(
+        name="bare", clock_hz=1e9, ports=("P0", "MEM"),
+        table={cls: OpEntry(("MEM",) if cls in ("dma", "ici") else ("P0",),
+                            1.0, 1.0)
+               for cls in ("mxu", "vpu", "xlu", "vdiv", "vlsu", "gather4",
+                           "sc", "dma", "ici")})
+    tiers = memtier.tiers_of(bare)
+    assert len(tiers) == 1 and tiers[0].name == "DRAM"
+    # dma is 1 cycle/byte at 1 GHz -> 1 GB/s flat
+    res = memtier.transfer_time(bare, ws_bytes=1e6, load_bytes=1e9)
+    assert res.seconds == pytest.approx(1.0)
+
+
+# --- ECM composition -------------------------------------------------------
+
+def test_full_overlap_is_max_none_is_sum():
+    kw = dict(ws_bytes=1e9, load_bytes=1e9, store_bytes=0.0)
+    full = memtier.transfer_time("zen4", overlap="full", **kw)
+    none = memtier.transfer_time("zen4", overlap="none", **kw)
+    assert full.seconds == pytest.approx(
+        max(leg.seconds for leg in full.legs))
+    assert none.seconds == pytest.approx(
+        sum(leg.seconds for leg in none.legs))
+    assert none.seconds > full.seconds
+    with pytest.raises(ValueError):
+        memtier.transfer_time("zen4", overlap="half", **kw)
+
+
+def test_tpu_dram_resident_degrades_to_flat_hbm_roofline():
+    m = get_machine("tpu_v5e")
+    traffic = 8e9                     # >> VMEM -> home tier is HBM
+    res = memtier.memory_seconds(m, traffic)
+    assert res.home == "HBM"
+    assert res.seconds == pytest.approx(traffic / m.chip.hbm_bw)
+
+
+def test_private_tiers_scale_with_cores_shared_tiers_cap():
+    t_priv = MemTier("L1", 1e5, 10e9, 10e9, shared_bw=0.0)
+    t_shared = MemTier("DRAM", math.inf, 10e9, 10e9, shared_bw=40e9)
+    assert memtier.effective_bw(t_priv, 8) == (80e9, 80e9)
+    assert memtier.effective_bw(t_shared, 8) == (40e9, 40e9)
+
+
+# --- modeled saturation (the SpecI2M gate) ---------------------------------
+
+def test_saturation_zero_on_private_tiers_and_full_at_dram():
+    for name in PAPER_CPUS:
+        m = get_machine(name)
+        assert memtier.modeled_saturation(m, 16e3) == 0.0       # L1
+        assert memtier.modeled_saturation(m, 1e9, m.cores) == 1.0
+        assert memtier.modeled_saturation(m, 1e9, 1) < 1.0      # one core
+
+
+def test_traffic_ratio_for_uses_ladder_gate():
+    # SpecI2M dormant for an L1-resident set, engaged for a DRAM set
+    r_cache = wa.traffic_ratio_for("golden_cove", ws_bytes=16e3)
+    r_dram = wa.traffic_ratio_for("golden_cove", ws_bytes=1e9)
+    assert r_cache == pytest.approx(2.0)
+    assert r_dram < r_cache
+    # explicit bw_utilization still overrides the model
+    assert wa.traffic_ratio_for("golden_cove", ws_bytes=16e3,
+                                bw_utilization=1.0) == pytest.approx(1.75)
+
+
+# --- WA residue per mode ---------------------------------------------------
+
+def test_wa_residue_per_mode_across_all_registered_machines():
+    """Per-tier store-traffic ratios follow each machine's wa_mode and
+    its declared per-tier residue on every registered machine."""
+    for name, m in MACHINES.items():
+        res = memtier.transfer_time(m, ws_bytes=1e12, load_bytes=0.0,
+                                    store_bytes=1e6,
+                                    cores_active=m.cores or 1)
+        tiers = {t.name: t for t in memtier.tiers_of(m)}
+        for leg in res.legs:
+            residue = tiers[leg.tier].wa_residue
+            if m.wa_mode == "auto_claim":
+                assert leg.wa_ratio == pytest.approx(1.0 + residue), \
+                    (name, leg.tier)
+            elif m.wa_mode == "explicit_only":
+                assert leg.wa_ratio == pytest.approx(2.0), (name, leg.tier)
+            else:           # saturation_gated: between residue and full WA
+                assert 1.0 + residue <= leg.wa_ratio + 1e-9, (name, leg.tier)
+                assert leg.wa_ratio <= 2.0 + 1e-9, (name, leg.tier)
+            assert 1.0 <= leg.wa_ratio <= 2.0 + 1e-9
+
+
+def test_nt_stores_invert_zen4_at_dram_only():
+    std = memtier.transfer_time("zen4", ws_bytes=1e9, load_bytes=0.0,
+                                store_bytes=1e6)
+    nt = memtier.transfer_time("zen4", ws_bytes=1e9, load_bytes=0.0,
+                               store_bytes=1e6, nt_stores=True)
+    assert std.legs[-1].wa_ratio == pytest.approx(2.0)
+    assert nt.legs[-1].wa_ratio == pytest.approx(1.0)   # full NT evasion
+
+
+def test_paper_cpu_specs_carry_four_tier_ladders():
+    for name in PAPER_CPUS:
+        spec = CPU_CHIPS[name]
+        names = [t.name for t in spec.mem_tiers]
+        assert names == ["L1", "L2", "L3", "DRAM"], name
+        assert spec.mem_tiers[0].capacity_bytes == spec.l1d_bytes, name
+        assert spec.mem_tiers[-1].shared_bw == spec.mem_bw, name
+        model = get_machine(name)
+        assert tuple(model.mem_tiers) == tuple(spec.mem_tiers), name
+        assert model.cores == spec.cores, name
+
+
+# --- validation ------------------------------------------------------------
+
+def _model_with_tiers(tiers):
+    base = get_machine("zen4")
+    import dataclasses
+    return dataclasses.replace(base, name="tiers_test", mem_tiers=tiers)
+
+
+def test_validate_rejects_bad_ladders():
+    bad = [
+        _ladder(("L1", -1.0, 1e9, 1e9, 0.0, 1.0),
+                ("DRAM", math.inf, 1e9, 1e9, 0.0, 1.0)),   # negative cap
+        _ladder(("L1", 1e6, 1e9, 1e9, 0.0, 1.0),
+                ("L2", 1e3, 1e9, 1e9, 0.0, 1.0),
+                ("DRAM", math.inf, 1e9, 1e9, 0.0, 1.0)),   # shrinking cap
+        _ladder(("L1", 1e3, 0.0, 1e9, 0.0, 1.0),
+                ("DRAM", math.inf, 1e9, 1e9, 0.0, 1.0)),   # zero bw
+        _ladder(("L1", 1e3, 1e9, 1e9, 0.0, 1.5),
+                ("DRAM", math.inf, 1e9, 1e9, 0.0, 1.0)),   # residue > 1
+        _ladder(("L1", 1e3, 1e9, 1e9, 0.0, 1.0),),         # no inf tier
+    ]
+    for tiers in bad:
+        with pytest.raises(MachineValidationError):
+            validate_model(_model_with_tiers(tiers))
+
+
+def test_validate_accepts_zero_capacity_disabled_levels():
+    validate_model(_model_with_tiers(_ladder(
+        ("L1", 1e3, 1e9, 1e9, 0.0, 1.0),
+        ("L2", 0.0, 1e9, 1e9, 0.0, 1.0),
+        ("DRAM", math.inf, 1e9, 1e9, 0.0, 1.0))))
+
+
+# --- fig5 regression -------------------------------------------------------
+
+def test_fig5_ladder_keeps_grace_spr_zen4_ordering():
+    from benchmarks import fig5_memladder
+    rows = fig5_memladder.ladder_rows()
+    verdicts = fig5_memladder.ordering_ok(rows)
+    assert set(verdicts) == {"L1", "L2", "L3", "DRAM"}
+    assert all(verdicts.values()), verdicts
+    # every sweep point resolved to the tier it was aimed at
+    for r in rows:
+        assert r["home"] == r["ws_label"], r
+
+
+def test_fig5_main_emits_rows_and_verdicts():
+    from benchmarks import fig5_memladder
+    lines = fig5_memladder.main(quick=True)
+    assert any(",ordering_DRAM,0,grace<=spr<=zen4=OK" in ln
+               for ln in lines)
+    assert sum(1 for ln in lines if ln.startswith("fig5,")) >= 16
