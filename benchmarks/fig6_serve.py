@@ -1,0 +1,109 @@
+"""Fig. 6 (extension): serve-engine tokens/s — predicted vs measured —
+with WA-priced KV-cache update traffic per machine.
+
+The continuous-batching engine (repro.serve) decodes a smoke config on
+the host; the same decode chunk's compiled HLO is fanned across every
+registered machine by `portmodel.compare`, and each machine's
+tier-resolved bound (`Report.tier_bound_seconds`) becomes a predicted
+tokens/s. Alongside, the per-decode-step KV-update traffic is priced
+through `wa.store_profile` in both regimes — donated (in-place
+dynamic-update-slice) and copied (the whole-cache copy a non-donated
+buffer forces, the system-scale write allocate of DESIGN.md §2) — so
+the donation delta is reported per machine in bytes per step.
+
+The host measurement is a functional smoke + sanity anchor, not a
+validation of the cross-vendor predictions (this container is not a
+Grace/SPR/Genoa socket); the record keeps both sides so a run on real
+hardware can score them (paper Fig. 3 methodology).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.machine import get_machine, registered_names
+from repro.models import model as M
+from repro.serve import Request, ServeEngine, decode_step_hlo
+from repro.serve.kv_traffic import kv_update_traffic
+from repro.serve.planner import plan_chunk_size
+
+ARCH = "gemma3-4b"           # local+global attention: both cache kinds
+BATCH, PROMPT = 4, 16
+
+
+def serve_record(gen: int = 32) -> dict:
+    """Run the engine once and assemble the fig6 record."""
+    cfg = get_smoke_config(ARCH)
+    max_len = PROMPT + gen
+    key = jax.random.PRNGKey(0)
+    k_params, k_prompts = jax.random.split(key)
+    params = M.init_params(cfg, k_params)
+    prompts = np.asarray(jax.random.randint(
+        k_prompts, (BATCH, PROMPT), 0, cfg.vocab_size))
+
+    hlo1 = decode_step_hlo(cfg, BATCH, max_len, n_tokens=1)
+    plan = plan_chunk_size(cfg, BATCH, max_len, hlo_text=hlo1,
+                           max_chunk=min(16, gen - 1))
+    eng = ServeEngine(cfg, params, max_slots=BATCH, max_len=max_len,
+                      chunk=plan.chunk)
+    reqs = [Request(rid=str(i), prompt=tuple(int(t) for t in prompts[i]),
+                    max_new_tokens=gen) for i in range(BATCH)]
+    eng.run(list(reqs))                # warm-up: compile prefill + decode
+    eng.decode_dispatches = eng.prefill_dispatches = 0
+    t0 = time.time()
+    out = eng.run(list(reqs))          # slots all retired: re-admit
+    dt = time.time() - t0
+    assert all(len(v) == gen for v in out.values())
+
+    measured_tok_s = BATCH * gen / dt
+    # predicted: per-machine tier-resolved seconds of one 1-token decode
+    # step; a chunk of n costs n steps (the scan floor multiplies trips)
+    pred = {name: BATCH / max(t, 1e-12)
+            for name, t in plan.per_machine.items()}
+    kv = kv_update_traffic(cfg, BATCH, max_len)
+    return {"arch": ARCH, "batch": BATCH, "gen": gen,
+            "chunk": plan.chunk, "plan_machine": plan.machine,
+            "dispatches": eng.decode_dispatches,
+            "measured_tok_s": measured_tok_s, "wall_s": dt,
+            "pred_tok_s": pred, "kv_rows": kv}
+
+
+def main(quick: bool = False):
+    """Emit the fig6 serve table as benchmark CSV lines."""
+    rec = serve_record(gen=16 if quick else 32)
+    lines = [
+        f"fig6,measured.host,{rec['wall_s']*1e6:.0f},"
+        f"tok_s={rec['measured_tok_s']:.1f};arch={rec['arch']};"
+        f"batch={rec['batch']};gen={rec['gen']};chunk={rec['chunk']};"
+        f"dispatches={rec['dispatches']};plan={rec['plan_machine']}"
+    ]
+    kv_by_machine = {r["machine"]: r for r in rec["kv_rows"]}
+    for name in registered_names():
+        if name not in rec["pred_tok_s"]:
+            continue
+        t_step = 1.0 / rec["pred_tok_s"][name] * rec["batch"]
+        kv = kv_by_machine.get(name)
+        kv_part = (f"kv_donated={kv['donated_bytes']/1e3:.1f}kB;"
+                   f"kv_copied={kv['copied_bytes']/1e6:.2f}MB;"
+                   f"kv_delta={kv['delta_bytes']/1e6:.2f}MB;"
+                   f"wa_mode={kv['wa_mode']}" if kv else "kv=n/a")
+        lines.append(
+            f"fig6,pred.{name},{t_step*1e6:.1f},"
+            f"tok_s={rec['pred_tok_s'][name]:.0f};{kv_part}")
+    # the WA story must hold on the serve path: donation strictly cheaper
+    # than copying on every machine
+    bad = [r["machine"] for r in rec["kv_rows"]
+           if not r["delta_bytes"] > 0]
+    lines.append(f"fig6,donation_delta,0,"
+                 f"positive_on_all={'OK' if not bad else bad}")
+    if bad:
+        raise AssertionError(f"donation delta non-positive on: {bad}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,17 +1,47 @@
-"""Batched serving example: prefill + decode with a donated KV cache
-(the framework's NT-store analogue) on a reduced gemma3 config (local+
-global attention mix exercises both cache kinds).
+"""Continuous-batching serving example: more requests than slots, mixed
+prompt lengths and budgets, on a reduced gemma3 config (local+global
+attention mix exercises both cache kinds). Requests are admitted as
+slots free up; the KV slot cache is preallocated once and updated in
+place (the framework's NT-store analogue).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 
-from repro.launch.serve import main as serve_main
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serve import Request, ServeEngine
 
 
 def main():
-    serve_main(["--arch", "gemma3-4b", "--smoke",
-                "--batch", "4", "--prompt-len", "64", "--gen", "32",
-                "--temperature", "0.8"])
+    cfg = get_smoke_config("gemma3-4b")
+    k_params, k_prompts = jax.random.split(jax.random.PRNGKey(0))
+    params = M.init_params(cfg, k_params)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=f"req{i}",
+                    prompt=tuple(rng.integers(0, cfg.vocab_size,
+                                              16 if i % 2 else 24)),
+                    max_new_tokens=16 + 8 * (i % 3))
+            for i in range(6)]
+
+    eng = ServeEngine(cfg, params, max_slots=2, max_len=64,
+                      temperature=0.8, seed=0)
+    t0 = time.time()
+    results = eng.run(list(reqs))
+    dt = time.time() - t0
+    total = sum(len(v) for v in results.values())
+    print(f"served {len(reqs)} requests on {eng.max_slots} slots: "
+          f"{total} tokens in {dt:.2f}s — chunk={eng.chunk}, "
+          f"{eng.decode_dispatches} decode dispatches, "
+          f"{eng.prefill_dispatches} prefills")
+    for r in reqs:
+        print(f"  {r.rid}: {len(results[r.rid])} tokens, "
+              f"first 8 = {results[r.rid][:8].tolist()}")
 
 
 if __name__ == "__main__":

@@ -20,9 +20,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import multiprocessing
+import os
+import pickle
 import re
+import warnings
 from collections import defaultdict
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor
 
 from repro.core import isa
 from repro.core.hloparse import (Computation, HloModule, Instr,
@@ -68,6 +72,9 @@ class Report:
     trips_seen: dict              # loop name -> trips
     loop_bytes: dict = dataclasses.field(default_factory=dict)
     # loop name -> (trips, bytes/iter, flops/iter) for bottleneck attribution
+    # µ-ops whose class had no machine-file entry and were degraded to the
+    # cheapest available class (see Analyzer._occupy)
+    fallback_uops: int = 0
     # memory-ladder resolution (filled by compare()/resolve_tiers — the
     # analyzer itself is tier-agnostic): ECM memory term in seconds and
     # the slowest / home tier of the module's traffic on this machine.
@@ -131,6 +138,7 @@ class Analyzer:
     def __init__(self, machine, n_devices: int = 1):
         self.machine = get_machine(machine)
         self.n_devices = n_devices
+        self._warned_classes: set = set()
 
     # -- public ------------------------------------------------------------
     def analyze_text(self, hlo_text: str) -> Report:
@@ -149,13 +157,42 @@ class Analyzer:
             bytes_hbm=acc.bytes_hbm, coll_bytes=dict(acc.coll),
             n_instrs=acc.n, unknown_ops=acc.unknown,
             trips_seen=dict(acc.trips_seen),
-            loop_bytes=dict(acc.loop_bytes))
+            loop_bytes=dict(acc.loop_bytes),
+            fallback_uops=acc.fallback)
 
     # -- internals ----------------------------------------------------------
+    def _fallback_entry(self, cls: str):
+        """Entry for a µ-op class the machine file does not cover.
+
+        Prefers `vpu` (the historical fallback); a machine registered
+        without one (e.g. injected straight into the MACHINES dict,
+        bypassing validate_model) degrades to the cheapest available
+        non-memory class instead of raising KeyError. Warns once per
+        missing class per analyzer; occurrences are counted on the
+        report (`Report.fallback_uops`).
+        """
+        entry = self.machine.table.get("vpu")
+        if entry is None:
+            cands = {c: e for c, e in self.machine.table.items()
+                     if c not in ("dma", "ici")} or dict(self.machine.table)
+            if not cands:
+                raise KeyError(
+                    f"machine {self.machine.name!r} has an empty µ-op table")
+            entry = min(cands.values(), key=lambda e: e.cycles_per_unit)
+        if cls not in self._warned_classes:
+            self._warned_classes.add(cls)
+            warnings.warn(
+                f"machine {self.machine.name!r} has no entry for µ-op "
+                f"class {cls!r}; degrading to the cheapest available "
+                f"class (counted in Report.fallback_uops)",
+                RuntimeWarning, stacklevel=3)
+        return entry
+
     def _occupy(self, acc, cls: str, units: float, mult: float):
         entry = self.machine.table.get(cls)
         if entry is None:
-            entry = self.machine.table["vpu"]
+            entry = self._fallback_entry(cls)
+            acc.fallback += 1
         cyc = units * entry.cycles_per_unit * mult
         if entry.port_weights is None:
             share = cyc / len(entry.ports)
@@ -313,6 +350,7 @@ class Analyzer:
                 acc.coll[k] += v * n * mult
             acc.n += sub.n
             acc.unknown += sub.unknown
+            acc.fallback += sub.fallback
             acc.serial += floor * mult
             acc.trips_seen.update(sub.trips_seen)
             acc.loop_bytes.update(sub.loop_bytes)
@@ -390,14 +428,16 @@ class Analyzer:
         return cp
 
     def _latency(self, instr: Instr, own_cycles: float) -> float:
-        base = {
-            "dot": self.machine.table["mxu"].latency,
-            "while": 0.0, "fusion": 0.0,
-        }.get(instr.opcode)
-        if base is None:
-            cls = ("xlu" if instr.opcode in isa.XLU_OPS else
+        if instr.opcode in ("while", "fusion"):
+            base = 0.0
+        else:
+            cls = ("mxu" if instr.opcode == "dot" else
+                   "xlu" if instr.opcode in isa.XLU_OPS else
                    "vdiv" if instr.opcode in isa.DIV_OPS else "vpu")
-            base = self.machine.table[cls].latency
+            entry = self.machine.table.get(cls)
+            if entry is None:
+                entry = self._fallback_entry(cls)
+            base = entry.latency
         if instr.opcode in isa.FREE_OPS:
             base = 0.0
         # a consumer needing the full result also waits for throughput
@@ -412,6 +452,7 @@ class _Acc:
         self.coll = defaultdict(float)
         self.n = 0
         self.unknown = 0
+        self.fallback = 0
         self.serial = 0.0
         self.cp = 0.0
         self.trips_seen = {}
@@ -455,31 +496,93 @@ def resolve_tiers(report: Report, machine) -> Report:
     return report
 
 
+#: HLO text of the in-flight compare() fan-out, set once per worker by the
+#: pool initializer so per-task IPC ships only the (small) machine model.
+_WORKER_HLO: str | None = None
+
+
+def _pool_init(hlo_text: str) -> None:
+    global _WORKER_HLO
+    _WORKER_HLO = hlo_text
+
+
+def _compare_worker(model, n_devices: int) -> Report:
+    """One machine's analysis, run in a pool worker process.
+
+    With the (default on Linux) fork start method the parent's memoized
+    parse (`_parse_cached`) is inherited copy-on-write, so workers skip
+    re-parsing; under spawn they re-parse once per process — correct,
+    just slower.
+    """
+    rep = Analyzer(model, n_devices).analyze_text(_WORKER_HLO)
+    return resolve_tiers(rep, model)
+
+
 def compare(hlo_text: str, machines=None, n_devices: int = 1,
-            max_workers: int | None = None) -> dict:
+            max_workers: int | None = None, parallel: str = "auto") -> dict:
     """Analyze one HLO module across several registered machines.
 
     `machines`: iterable of names and/or MachineModels; defaults to every
-    registered machine. The module is parsed once (memoized) and shared
-    read-only by all analyses, which fan out on a thread pool — each
-    Analyzer only mutates its own accumulator. (The analyses are pure
-    Python, so the pool buys overlap only where the GIL is released; the
-    single shared parse is the main saving.) Every report comes back
-    with its memory-ladder fields resolved (`resolve_tiers`), so callers
-    can read the tier-resolved bound (`Report.tier_bound_seconds`) and
-    bottleneck tier directly. Returns {machine name: Report} preserving
-    the requested order.
+    registered machine. The module is parsed once (memoized) and every
+    report comes back with its memory-ladder fields resolved
+    (`resolve_tiers`), so callers can read the tier-resolved bound
+    (`Report.tier_bound_seconds`) and bottleneck tier directly. Returns
+    {machine name: Report} preserving the requested order.
+
+    The analyses are pure Python, so the fan-out runs on a **process**
+    pool (a thread pool would be GIL-bound — its own docstring used to
+    concede it bought almost nothing). `parallel`: "auto" (pool when the
+    estimated analysis work amortizes the fork/IPC overhead, fork is
+    available, and the models pickle), "serial" (in-process loop), or
+    "process" (force the pool). Ad-hoc unpicklable models and pool
+    failures degrade to the serial loop, so results never depend on the
+    execution mode.
     """
     if machines is None:
         machines = registered_names()
     models = [get_machine(m) for m in machines]
     mod, trips = _parse_cached(hlo_text)
 
-    def run(model):
-        rep = Analyzer(model, n_devices).analyze_module(mod, trips)
-        return resolve_tiers(rep, model)
+    def run_serial():
+        out = []
+        for model in models:
+            rep = Analyzer(model, n_devices).analyze_module(mod, trips)
+            out.append(resolve_tiers(rep, model))
+        return out
 
-    workers = max_workers or min(8, max(1, len(models)))
-    with ThreadPoolExecutor(max_workers=workers) as ex:
-        reports = list(ex.map(run, models))
+    workers = min(max_workers or 8, len(models),
+                  max(1, os.cpu_count() or 1))
+    # ~17 µs/instr·machine analysis vs a few hundred ms of pool setup:
+    # the pool only pays off when the serial fan-out is >~ 1 s of work
+    n_instr = sum(len(c.instrs) for c in mod.computations.values())
+    big_enough = n_instr * len(models) > 50_000
+    use_pool = parallel == "process" or (
+        parallel == "auto" and workers > 1 and big_enough
+        and "fork" in multiprocessing.get_all_start_methods())
+    if use_pool:
+        try:
+            pickle.dumps(models)
+        except Exception:
+            use_pool = False        # ad-hoc model: serial fallback
+    reports = None
+    if use_pool:
+        try:
+            ctx = multiprocessing.get_context("fork")
+            with warnings.catch_warnings():
+                # the workers never touch XLA; silence jax's blanket
+                # fork-after-threads warning for this short-lived pool
+                warnings.filterwarnings(
+                    "ignore", message=".*os.fork.*", category=RuntimeWarning)
+                with ProcessPoolExecutor(max_workers=workers,
+                                         mp_context=ctx,
+                                         initializer=_pool_init,
+                                         initargs=(hlo_text,)) as ex:
+                    chunk = max(1, len(models) // workers)
+                    reports = list(ex.map(
+                        _compare_worker, models,
+                        [n_devices] * len(models), chunksize=chunk))
+        except Exception:
+            reports = None          # broken pool: serial fallback
+    if reports is None:
+        reports = run_serial()
     return {m.name: r for m, r in zip(models, reports)}

@@ -196,6 +196,38 @@ def traffic_ratio_for(machine, *, nt_stores: bool = False,
                                  tile_full_frac=tile_full_frac)
 
 
+def priced_store_traffic(profile: StoreProfile, machine, *,
+                         nt_stores: bool = False,
+                         ws_bytes: float | None = None,
+                         cores_active: int | None = None) -> float:
+    """Total memory traffic (bytes) of one StoreProfile on one machine.
+
+    The stored payload is priced at the machine's Fig. 4 ratio evaluated
+    at the profile's tile fullness (``tile_full_frac`` = 1 - rmw/stored,
+    which may go negative for badly misaligned stores — the ratio then
+    correctly exceeds the mode's base). A donation-copy term
+    (``profile.copy_bytes``: the whole-buffer copy XLA materializes for a
+    partial write into a non-donated buffer) is priced as one full read
+    plus a full-overwrite write at the machine's ratio — the copy streams
+    whole tiles, so only the machine's base WA behaviour applies to it.
+    Used by repro.serve.kv_traffic to report the per-machine
+    donated-vs-copied KV-update delta.
+    """
+    stored = profile.stored_bytes
+    full_frac = 1.0 - profile.rmw_read_bytes / stored if stored > 0 else 1.0
+    ratio = traffic_ratio_for(machine, nt_stores=nt_stores,
+                              tile_full_frac=full_frac,
+                              ws_bytes=ws_bytes, cores_active=cores_active)
+    traffic = stored * ratio
+    if profile.copy_bytes:
+        ratio_full = traffic_ratio_for(machine, nt_stores=nt_stores,
+                                       tile_full_frac=1.0,
+                                       ws_bytes=ws_bytes,
+                                       cores_active=cores_active)
+        traffic += profile.copy_bytes * (1.0 + ratio_full)
+    return traffic
+
+
 def apply_wa_mode(scan: dict, machine, *, nt_stores: bool = False,
                   bw_utilization: float | None = None,
                   ws_bytes: float | None = None,

@@ -1,5 +1,10 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-donated KV cache (in-place updates — the NT-store analogue, DESIGN.md §2).
+"""Serving driver on the continuous-batching engine (repro.serve).
+
+Prompts are prefilled into preallocated KV slots (cache built once at
+the full horizon — no ``jnp.pad`` regrow, which used to copy the whole
+cache: a system-scale write allocate, DESIGN.md §2) and decoded in
+multi-token in-graph chunks: ``ceil(gen/chunk)`` decode dispatches
+instead of one per token.
 
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --smoke \
       --batch 4 --prompt-len 64 --gen 32
@@ -11,46 +16,42 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import model as M
-from repro.train import serve as serve_lib
+from repro.serve import Request, ServeEngine
 
 
 def generate(cfg, params, prompt_tokens, gen_len: int, *,
-             temperature: float = 0.0, seed: int = 0):
-    """Greedy/temperature batched generation. prompt_tokens: (B, S)."""
+             temperature: float = 0.0, seed: int = 0,
+             chunk: int | None = None, machine: str | None = None,
+             engine_out: list | None = None):
+    """Greedy/temperature batched generation. prompt_tokens: (B, S).
+
+    One slot per prompt; the whole batch is admitted at once (a single
+    batched prefill), then decoded in chunks. ``chunk=None`` plans the
+    chunk size analytically from the port model (repro.serve.planner).
+    Pass a list as ``engine_out`` to receive the engine (dispatch
+    counters) for inspection.
+    """
+    import numpy as np
+
     b, s = prompt_tokens.shape
-    total = s + gen_len
-    prefill = jax.jit(serve_lib.make_prefill_step(cfg))
-    decode = jax.jit(serve_lib.make_decode_step(cfg), donate_argnums=(1,))
-
-    logits, cache = prefill(params, {"tokens": prompt_tokens})
-
-    # grow attention KV buffers to the full generation horizon
-    def grow(x):
-        if x.ndim == 4 and x.shape[1] == s:        # (B, S, Hkv, Dh)
-            return jnp.pad(x, [(0, 0), (0, gen_len), (0, 0), (0, 0)])
-        if x.ndim == 5 and x.shape[2] == s:        # stacked scan caches
-            return jnp.pad(x, [(0, 0), (0, 0), (0, gen_len), (0, 0), (0, 0)])
-        return x
-    cache = jax.tree.map(grow, cache)
-
-    key = jax.random.PRNGKey(seed)
-    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-    out = [tok]
-    for i in range(gen_len - 1):
-        logits1, cache = decode(params, cache, {"tokens": tok[:, None]},
-                                jnp.int32(s + i))
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits1 / temperature, axis=-1)
-            tok = tok.astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits1, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    return jnp.stack(out, axis=1)
+    if chunk is None and gen_len > 1:
+        from repro.serve.planner import plan_chunk_size
+        chunk = plan_chunk_size(cfg, b, s + gen_len, machine=machine,
+                                max_chunk=min(32, gen_len - 1)).chunk
+    eng = ServeEngine(cfg, params, max_slots=b, max_len=s + gen_len,
+                      chunk=min(chunk or 1, max(1, gen_len - 1)),
+                      temperature=temperature, seed=seed)
+    prompts = np.asarray(prompt_tokens)
+    reqs = [Request(rid=str(i), prompt=tuple(int(t) for t in prompts[i]),
+                    max_new_tokens=gen_len) for i in range(b)]
+    results = eng.run(reqs)
+    if engine_out is not None:
+        engine_out.append(eng)
+    import jax.numpy as jnp
+    return jnp.stack([jnp.asarray(results[str(i)]) for i in range(b)])
 
 
 def main(argv=None):
@@ -60,21 +61,32 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="decode tokens per dispatch (0 = plan from the "
+                         "port model's tier-resolved step cost)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
-    params = M.init_params(cfg, key)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len),
+    # params and prompts must be independent streams: reusing one key for
+    # both correlates the prompt ids with the embedding init
+    k_params, k_prompts = jax.random.split(key)
+    params = M.init_params(cfg, k_params)
+    prompts = jax.random.randint(k_prompts, (args.batch, args.prompt_len),
                                  0, cfg.vocab_size)
+    eng_out: list = []
     t0 = time.time()
     toks = generate(cfg, params, prompts, args.gen,
-                    temperature=args.temperature, seed=args.seed)
+                    temperature=args.temperature, seed=args.seed,
+                    chunk=args.chunk or None, engine_out=eng_out)
     dt = time.time() - t0
+    eng = eng_out[0]
     print(f"generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s) — "
+          f"{eng.decode_dispatches} decode dispatches "
+          f"(chunk={eng.chunk}) + {eng.prefill_dispatches} prefill")
     print("sample:", toks[0, :16].tolist())
     return toks
 

@@ -138,10 +138,12 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None
                      ) -> jax.Array:
     """Single-token decode: q (B, 1, H, Dh) vs cache (B, Skv, Hkv, Dh).
 
-    ``pos`` is the (scalar int32) position of the new token; cache entries at
-    indices > pos are masked. With the cache sequence dim sharded over the
-    "model" mesh axis, XLA SPMD turns the softmax/value reductions into
-    cross-device psums (distributed flash-decoding).
+    ``pos`` is the position of the new token — a scalar int32, or a (B,)
+    vector when slots decode at independent positions (continuous batching,
+    repro.serve). Cache entries at indices > pos are masked per row. With
+    the cache sequence dim sharded over the "model" mesh axis, XLA SPMD
+    turns the softmax/value reductions into cross-device psums
+    (distributed flash-decoding).
     """
     b, _, h, dh = q.shape
     skv, hkv = k_cache.shape[1], k_cache.shape[2]
@@ -149,10 +151,11 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None
     qg = q.reshape(b, 1, hkv, g, dh) * (1.0 / math.sqrt(dh))
     s = _gqa_scores(qg, k_cache)                              # (B,Hkv,G,1,Skv)
     kpos = jnp.arange(skv)
-    mask = kpos <= pos
+    posb = jnp.reshape(jnp.asarray(pos), (-1, 1))             # (1|B, 1)
+    mask = kpos[None, :] <= posb
     if window is not None:
-        mask &= kpos > (pos - window)
-    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        mask &= kpos[None, :] > (posb - window)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = _gqa_values(p, v_cache)                               # (B,1,Hkv,G,Dh)
     return o.reshape(b, 1, h, dh)

@@ -369,7 +369,7 @@ def _project(x, w, b=None):
 
 
 def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
-                positions, cache, pos):
+                positions, cache, pos, cache_len: int | None = None):
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_eff
     q = _project(x, p["wq"], p.get("bq"))
@@ -388,16 +388,32 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
 
     new_cache = None
     if mode == "decode":
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        if jnp.ndim(pos) == 0:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        else:
+            # per-slot positions (continuous batching): each batch row
+            # writes its own cache row in place
+            row_dus = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u, i, axis=0))
+            kc = row_dus(cache["k"], k.astype(cache["k"].dtype), pos)
+            vc = row_dus(cache["v"], v.astype(cache["v"].dtype), pos)
         y = attn_lib.decode_attention(q, kc, vc, pos, window=window)
         new_cache = {"k": kc, "v": vc}
     else:
         y = attn_lib.chunked_causal_attention(
             q, k, v, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, window=window)
         if mode == "prefill":
-            new_cache = {"k": k.astype(jnp.dtype(cfg.param_dtype)),
-                         "v": v.astype(jnp.dtype(cfg.param_dtype))}
+            kd = k.astype(jnp.dtype(cfg.param_dtype))
+            vd = v.astype(jnp.dtype(cfg.param_dtype))
+            if cache_len is not None and cache_len > s:
+                # build the KV buffer at the full decode horizon in the
+                # prefill graph itself — decode then updates it in place
+                # (donation), with no post-hoc jnp.pad regrow/copy
+                pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+                kd, vd = jnp.pad(kd, pad), jnp.pad(vd, pad)
+            new_cache = {"k": kd, "v": vd}
     out = jnp.einsum("bshe,hed->bsd", y, p["wo"])
     return out, new_cache
 
@@ -431,14 +447,14 @@ def _slstm_mixer(cfg, p, x, *, mode, cache):
 
 
 def apply_block(cfg: ModelConfig, blk: str, p: dict, x, *, mode: str,
-                positions, cache, pos):
+                positions, cache, pos, cache_len: int | None = None):
     """Returns (x_out, aux_loss, new_cache)."""
     mixer, ffn = blk.split(":")
     hx = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     if mixer in ("attn", "attn_local"):
         y, new_cache = _attn_mixer(cfg, p["mixer"], hx, local=(mixer == "attn_local"),
                                    mode=mode, positions=positions,
-                                   cache=cache, pos=pos)
+                                   cache=cache, pos=pos, cache_len=cache_len)
     elif mixer == "mamba":
         y, new_cache = _mamba_mixer(cfg, p["mixer"], hx, mode=mode, cache=cache)
     elif mixer == "mlstm":
@@ -475,14 +491,18 @@ def _remat_wrap(cfg, fn):
 
 
 def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
-            cache: dict | None = None, pos=None):
+            cache: dict | None = None, pos=None, cache_len: int | None = None):
     """Run the model.
 
     batch: {"tokens": (B,S) int32} or {"embeds": (B,S,d)}; optional
     "positions" ((B,S) int32, or (3,B,S) for mrope).
     mode: "train" -> logits
-          "prefill" -> (logits, cache)
-          "decode" -> (logits, cache); S==1, `pos` scalar int32 required.
+          "prefill" -> (logits, cache); `cache_len` (optional) preallocates
+                       the attention KV buffers at the full decode horizon
+                       inside the prefill graph (repro.serve slot caches)
+          "decode" -> (logits, cache); S==1, `pos` required — scalar int32,
+                      or (B,) int32 for per-slot positions (continuous
+                      batching: each row attends/updates at its own pos).
     Returns logits (B, S, V) plus aux-loss scalar as (logits, aux[, cache]).
     """
     if cfg.embed_inputs:
@@ -497,7 +517,9 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
     if "positions" in batch:
         positions = batch["positions"]
     elif mode == "decode":
-        base = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        p1 = jnp.asarray(pos)
+        base = jnp.broadcast_to(p1[:, None] if p1.ndim else p1,
+                                (b, 1)).astype(jnp.int32)
         positions = jnp.broadcast_to(base, (3, b, 1)) if cfg.rope_kind == "mrope" else base
     else:
         base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -524,7 +546,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
             for j, blk in enumerate(unit_blocks):
                 x, a, nc = apply_block(cfg, blk, p_r[str(j)], x,
                                        mode=mode, positions=positions,
-                                       cache=c_r[str(j)], pos=pos)
+                                       cache=c_r[str(j)], pos=pos,
+                                       cache_len=cache_len)
                 aux_total = aux_total + a
                 new_slices[str(j)] = nc
             new_slices_all.append(new_slices)
@@ -541,7 +564,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
                 cj = c_slice[str(j)] if c_slice is not None else None
                 x, a, nc = apply_block(cfg, blk, p_slice[str(j)], x,
                                        mode=mode, positions=positions,
-                                       cache=cj, pos=pos)
+                                       cache=cj, pos=pos,
+                                       cache_len=cache_len)
                 aux = aux + a
                 if nc is not None:
                     new_slices[str(j)] = nc
@@ -563,7 +587,7 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
         ci = cache["tail"][str(i)] if (cache is not None and mode == "decode") else None
         x, a, nc = apply_block(cfg, blk, params["tail"][str(i)], x,
                                mode=mode, positions=positions,
-                               cache=ci, pos=pos)
+                               cache=ci, pos=pos, cache_len=cache_len)
         aux_total = aux_total + a
         if nc is not None and mode in ("prefill", "decode"):
             new_cache["tail"][str(i)] = nc

@@ -1,0 +1,33 @@
+"""Continuous-batching serving subsystem.
+
+The engine holds a fixed number of KV **slots**: a slot-batched cache
+preallocated once at the full decode horizon (``models.model.forward``'s
+``cache_len`` plumbing — no ``jnp.pad`` regrow, no recompiles as batch
+composition changes). Requests are admitted into free slots (per-request
+prefill + in-place slot insert), decoded in in-graph multi-token chunks
+with per-slot positions and in-graph temperature sampling, and retired
+as they finish — new requests join mid-flight without disturbing the
+streams already decoding.
+
+The analytical stack is wired in: the scheduler picks its decode chunk
+size from the port model's tier-resolved per-step cost
+(``repro.serve.planner``, via ``portmodel.compare`` /
+``Report.tier_bound_seconds``), and the per-step KV-update traffic is
+priced through ``wa.store_profile`` so the donation-vs-copy delta is
+reported per machine (``repro.serve.kv_traffic``).
+"""
+
+from repro.serve.decode import make_chunked_decode_step
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_traffic import kv_update_traffic
+from repro.serve.planner import ChunkPlan, decode_step_hlo, plan_chunk_size
+
+__all__ = [
+    "ChunkPlan",
+    "Request",
+    "ServeEngine",
+    "decode_step_hlo",
+    "kv_update_traffic",
+    "make_chunked_decode_step",
+    "plan_chunk_size",
+]

@@ -1,0 +1,59 @@
+"""In-graph chunked decode: n tokens per dispatch, per-slot positions,
+in-graph temperature sampling.
+
+Generalizes ``train/serve.py:make_decode_loop_step`` (greedy, scalar
+position) to the serve engine's needs: every slot decodes at its own
+position (``pos`` is a (B,) vector), and sampling happens inside the
+token scan so a temperature>0 engine still issues one dispatch per
+chunk. The cache flows through the scan carry, so with the jit-level
+donation the per-token dynamic-update-slice stays in place — the
+NT-store analogue (DESIGN.md §2) at serve scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
+                             temperature: float = 0.0):
+    """Build the n-token decode chunk: one dispatch, n in-graph steps.
+
+    Returns ``step(params, cache, tokens, pos, key) -> (toks, cache, pos)``
+    with ``tokens`` (B, 1) int32 (each slot's last emitted token), ``pos``
+    a scalar or (B,) int32 (each slot's write position), and ``key`` a
+    PRNG key consumed only when ``temperature > 0``. ``toks`` is
+    (B, n_tokens): the next n tokens of every slot. Token-id models only.
+    """
+    assert cfg.embed_inputs, "chunked decode needs a token embedding"
+    assert n_tokens >= 1
+
+    def step(params, cache, tokens, pos, key):
+        def body(carry, _):
+            cache, tok, pos, key = carry
+            logits, _, new_cache = M.forward(cfg, params, {"tokens": tok},
+                                            mode="decode", cache=cache,
+                                            pos=pos)
+            # some mixers emit recurrent state in compute dtype (bf16);
+            # the cache contract (model.cache_shapes) carries them f32 —
+            # pin the scan carry to the contract's dtypes
+            cache = jax.tree.map(lambda new, old: new.astype(old.dtype),
+                                 new_cache, cache)
+            lg = logits[:, 0]
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, lg / temperature, axis=-1)
+                nxt = nxt.astype(jnp.int32)
+            else:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            return (cache, nxt[:, None], pos + 1, key), nxt
+
+        (cache, _, pos, _), toks = jax.lax.scan(
+            body, (cache, tokens, pos, key), None, length=n_tokens)
+        return jnp.swapaxes(toks, 0, 1), cache, pos
+
+    return step

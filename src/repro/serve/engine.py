@@ -1,0 +1,215 @@
+"""Continuous-batching serve engine: fixed KV slots, admit/evict per
+decode round, chunked in-graph decode.
+
+Life of a request: it waits in the pending queue until a slot frees,
+is prefilled (batch=1, cache built directly at the full horizon) and
+inserted into its slot in place, then decodes along with every other
+active slot — each at its own position — in multi-token chunks. When its
+budget is spent it retires and the slot is free for the next admission;
+the big slot cache is never reallocated, regrown, or recompiled as the
+batch composition changes.
+
+Numerical caveat: slots are independent streams for every per-row mixer
+(attention, mamba, xLSTM). MoE blocks with finite capacity couple rows
+through expert capacity — serve MoE configs with a generous
+``capacity_factor`` if bit-exact per-request streams matter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serve.decode import make_chunked_decode_step
+from repro.serve.planner import plan_chunk_size
+from repro.serve.slots import make_insert_step
+from repro.train import serve as serve_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: prompt token ids and a token budget."""
+
+    rid: str
+    prompt: tuple                 # prompt token ids
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: str
+    remaining: int                # tokens still owed to this request
+    out: list                     # tokens emitted so far
+
+
+class ServeEngine:
+    """Continuous-batching engine over ``max_slots`` preallocated KV slots.
+
+    ``chunk`` tokens are decoded per dispatch; when omitted the chunk size
+    is planned analytically from the port model's tier-resolved per-step
+    cost (repro.serve.planner). Prefill compiles once per distinct prompt
+    length (jit's own shape-keyed cache); decode and slot-insert compile
+    exactly once. ``run(requests)`` drives admit -> decode-chunk -> retire
+    rounds until every request has its tokens.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
+                 max_len: int, chunk: int | None = None,
+                 temperature: float = 0.0, seed: int = 0,
+                 machine: str | None = None):
+        assert cfg.embed_inputs, "serve engine needs a token-id model"
+        self.cfg, self.params = cfg, params
+        self.max_slots, self.max_len = max_slots, max_len
+        self.temperature = float(temperature)
+        if chunk is None:
+            chunk = plan_chunk_size(cfg, max_slots, max_len,
+                                    machine=machine).chunk
+        self.chunk = max(1, int(chunk))
+        self.cache = M.init_cache(cfg, max_slots, max_len)
+        self._decode = jax.jit(
+            make_chunked_decode_step(cfg, self.chunk, self.temperature),
+            donate_argnums=(1,))
+        self._insert = jax.jit(make_insert_step(cfg), donate_argnums=(0,))
+        # jit retraces per prompt length/batch shape on its own — one
+        # wrapper serves every admission path
+        self._prefill = jax.jit(serve_lib.make_prefill_step(
+            cfg, cache_len=max_len))
+        self._key = jax.random.PRNGKey(seed)
+        self.slots: list = [None] * max_slots
+        self._tok = np.zeros((max_slots, 1), np.int32)
+        self._pos = np.zeros((max_slots,), np.int32)
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+
+    # -- admission ----------------------------------------------------------
+    def free_slots(self) -> list:
+        """Indices of slots with no active request."""
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def _sample_first(self, logits):
+        """First output token from the prefill's last-prompt-token logits."""
+        if self.temperature > 0.0:
+            self._key, sub = jax.random.split(self._key)
+            tok = jax.random.categorical(sub, logits / self.temperature,
+                                         axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        return np.asarray(tok, np.int32)
+
+    def _check_request(self, req: Request, prompt_len: int) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 "
+                f"(got {req.max_new_tokens})")
+        if prompt_len + req.max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {prompt_len} + "
+                f"{req.max_new_tokens} new tokens exceeds the slot "
+                f"horizon {self.max_len}")
+
+    def admit(self, req: Request, slot: int | None = None) -> int:
+        """Prefill one request and insert it into a free slot, in place."""
+        if slot is None:
+            free = self.free_slots()
+            if not free:
+                raise RuntimeError("no free slot")
+            slot = free[0]
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        prompt = np.asarray(req.prompt, np.int32)
+        s = prompt.shape[0]
+        self._check_request(req, s)
+        logits, one = self._prefill(self.params, {"tokens": prompt[None, :]})
+        self.prefill_dispatches += 1
+        tok0 = int(self._sample_first(logits[:, -1])[0])
+        self.cache = self._insert(self.cache, one, jnp.int32(slot))
+        self.slots[slot] = _Slot(rid=req.rid, remaining=req.max_new_tokens - 1,
+                                 out=[tok0])
+        self._tok[slot, 0] = tok0
+        self._pos[slot] = s
+        return slot
+
+    def admit_batch(self, reqs: list) -> None:
+        """Admit a full batch at once (all slots free, equal prompt lens).
+
+        One batched prefill builds the whole slot cache directly — the
+        fast path for the launch driver's fixed-shape batch. Falls back
+        to per-request admission otherwise.
+        """
+        lens = {len(r.prompt) for r in reqs}
+        if (len(reqs) != self.max_slots or len(lens) != 1
+                or any(s is not None for s in self.slots)):
+            for r in reqs:
+                self.admit(r)
+            return
+        s = lens.pop()
+        prompts = np.stack([np.asarray(r.prompt, np.int32) for r in reqs])
+        for r in reqs:
+            self._check_request(r, s)
+        logits, self.cache = self._prefill(self.params, {"tokens": prompts})
+        self.prefill_dispatches += 1
+        tok0 = self._sample_first(logits[:, -1])
+        for i, r in enumerate(reqs):
+            self.slots[i] = _Slot(rid=r.rid, remaining=r.max_new_tokens - 1,
+                                  out=[int(tok0[i])])
+            self._tok[i, 0] = tok0[i]
+            self._pos[i] = s
+
+    # -- decode -------------------------------------------------------------
+    def step(self) -> list:
+        """One decode round: a single chunked dispatch over all slots.
+
+        Returns the requests retired this round as (rid, tokens) pairs.
+        """
+        retired = []
+        for i, st in enumerate(self.slots):
+            if st is not None and st.remaining <= 0:   # 1-token budgets:
+                # the prefill already yielded their only token
+                retired.append((st.rid, np.asarray(st.out, np.int32)))
+                self.slots[i] = None
+        if all(s is None for s in self.slots):
+            return retired
+        self._key, sub = jax.random.split(self._key)
+        toks, self.cache, _ = self._decode(
+            self.params, self.cache, jnp.asarray(self._tok),
+            jnp.asarray(self._pos), sub)
+        self.decode_dispatches += 1
+        toks = np.asarray(toks)
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            take = min(self.chunk, st.remaining)
+            st.out.extend(int(t) for t in toks[i, :take])
+            st.remaining -= take
+            self._tok[i, 0] = toks[i, self.chunk - 1]
+            self._pos[i] += self.chunk
+            if st.remaining <= 0:
+                retired.append((st.rid, np.asarray(st.out, np.int32)))
+                self.slots[i] = None
+        return retired
+
+    def run(self, requests: list) -> dict:
+        """Serve a request list to completion: {rid: (n_tokens,) int32}."""
+        pending = deque(requests)
+        results: dict = {}
+        first = True
+        while pending or any(s is not None for s in self.slots):
+            if pending and self.free_slots():
+                if first and len(pending) >= self.max_slots:
+                    batch = [pending.popleft()
+                             for _ in range(self.max_slots)]
+                    self.admit_batch(batch)
+                else:
+                    for slot in self.free_slots():
+                        if not pending:
+                            break
+                        self.admit(pending.popleft(), slot)
+            first = False
+            for rid, toks in self.step():
+                results[rid] = toks
+        return results

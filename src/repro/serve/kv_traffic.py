@@ -1,0 +1,87 @@
+"""WA-priced KV-cache update traffic: donated (in-place) vs copied.
+
+Each decode step writes one (Hkv, Dh) row per slot into every attention
+layer's K and V buffers. With donation the dynamic-update-slice happens
+in place — the traffic is the row itself plus whatever read-modify-write
+the machine's write-allocate behaviour forces on the partial tiles it
+touches (``wa.store_profile``). Without donation, XLA must first copy
+the *whole* cache buffer — a system-scale write allocate, the failure
+mode the paper's CloverLeaf WA study quantifies (arXiv:2311.04797) and
+exactly what the old ``jnp.pad`` regrow in launch/serve.py used to do
+every generation. The per-machine delta between the two is the serve
+path's WA story in bytes.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.configs.base import ModelConfig
+from repro.core import wa
+from repro.core.machine import get_machine, registered_names
+from repro.utils.hw import dtype_bytes
+
+_JAX_DTYPE = {"bfloat16": "bf16", "float32": "f32", "float16": "f16"}
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    return sum(blk.split(":")[0] in ("attn", "attn_local")
+               for blk in cfg.layer_plan())
+
+
+def decode_kv_profiles(cfg: ModelConfig, batch: int,
+                       max_len: int) -> dict:
+    """Per-decode-step KV-store profiles: ``donated`` and ``copied``.
+
+    Aggregated over all attention layers and both K and V: one
+    (Hkv, Dh) row per slot, dynamic (offset-unaligned) sequence offset.
+    The ``copied`` profile adds the whole-buffer copy a non-donated
+    update would force. Returns the two StoreProfiles plus the total
+    cache bytes (the working set gating SpecI2M saturation).
+    """
+    n_attn = _attn_layers(cfg)
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim_eff
+    dtype = _JAX_DTYPE.get(cfg.param_dtype, "f32")
+    eb = dtype_bytes(dtype)
+    row = wa.store_profile((hkv, dh), dtype, offset_aligned=False,
+                           donated=True, full_overwrite=False)
+    n_stores = 2 * n_attn * batch            # K and V, per layer, per slot
+    leaf_bytes = float(batch * max_len * hkv * dh * eb)
+    cache_bytes = 2 * n_attn * leaf_bytes
+    donated = wa.StoreProfile(row.stored_bytes * n_stores,
+                              row.rmw_read_bytes * n_stores)
+    copied = wa.StoreProfile(donated.stored_bytes, donated.rmw_read_bytes,
+                             copy_bytes=cache_bytes)
+    return {"donated": donated, "copied": copied,
+            "cache_bytes": cache_bytes, "n_attn_layers": n_attn}
+
+
+def kv_update_traffic(cfg: ModelConfig, batch: int, max_len: int, *,
+                      machines=None, nt_stores: bool = False) -> list:
+    """Per-machine donated-vs-copied KV-update traffic, one dict per row.
+
+    Rows carry the machine's WA mode, the per-decode-step traffic of the
+    donated (in-place) update and of the non-donated (copy-first) update,
+    and their delta — what cache donation saves on that machine, priced
+    through its Fig. 4 behavioural mode with the SpecI2M gate modeled on
+    the full cache working set.
+    """
+    profs = decode_kv_profiles(cfg, batch, max_len)
+    rows = []
+    for name in (machines if machines is not None else registered_names()):
+        m = get_machine(name)
+        kw = dict(nt_stores=nt_stores, ws_bytes=profs["cache_bytes"],
+                  cores_active=m.cores)
+        donated = wa.priced_store_traffic(profs["donated"], m, **kw)
+        copied = wa.priced_store_traffic(profs["copied"], m, **kw)
+        rows.append({
+            "machine": m.name, "wa_mode": m.wa_mode,
+            "stored_bytes": profs["donated"].stored_bytes,
+            "donated_bytes": donated, "copied_bytes": copied,
+            "delta_bytes": copied - donated,
+            "cache_bytes": profs["cache_bytes"],
+            "n_attn_layers": profs["n_attn_layers"],
+        })
+    if not math.isfinite(sum(r["delta_bytes"] for r in rows)):
+        raise AssertionError("non-finite KV traffic pricing")
+    return rows

@@ -1,0 +1,89 @@
+"""Analytical decode-chunk planning.
+
+The serve engine amortizes per-dispatch overhead (Python loop, runtime
+launch) over in-graph decode chunks. How many tokens a chunk should hold
+depends on how long one decode step *takes* — which is exactly what the
+analytical stack models: the decode step's compiled HLO is analyzed by
+the port model (``portmodel.compare``) and the chunk size is chosen so
+the modeled dispatch overhead stays below ``overhead_frac`` of the
+tier-resolved per-step cost (``Report.tier_bound_seconds``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import portmodel
+from repro.core.machine import get_machine, registered_names
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """Planned decode chunk: size, the machine it was planned for, the
+    tier-resolved per-step model cost there, and the per-machine costs of
+    every machine the module was compared on."""
+
+    chunk: int
+    machine: str
+    t_step_seconds: float
+    per_machine: dict            # machine name -> tier-resolved step seconds
+
+
+def decode_step_hlo(cfg: ModelConfig, batch: int, max_len: int,
+                    n_tokens: int = 1, temperature: float = 0.0) -> str:
+    """Compiled HLO text of one n-token decode chunk at serve shapes.
+
+    Lowered against abstract shapes only — no parameters or cache are
+    materialized.
+    """
+    from repro.serve.decode import make_chunked_decode_step
+
+    step = make_chunked_decode_step(cfg, n_tokens, temperature)
+    pshapes = M.param_shapes(cfg)
+    cshapes = M.cache_shapes(cfg, batch, max_len)
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return jax.jit(step, donate_argnums=(1,)).lower(
+        pshapes, cshapes, tok, pos, key).compile().as_text()
+
+
+def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
+                    machine: str | None = None,
+                    dispatch_overhead_s: float = 2e-4,
+                    overhead_frac: float = 0.1,
+                    max_chunk: int = 32,
+                    hlo_text: str | None = None) -> ChunkPlan:
+    """Pick the decode chunk size from the port model's per-step cost.
+
+    chunk = ceil(dispatch_overhead / (overhead_frac * t_step)) clamped to
+    [1, max_chunk]: enough in-graph tokens that the per-dispatch overhead
+    is at most ``overhead_frac`` of the modeled chunk time. ``machine``
+    defaults to ``host_cpu`` when calibrated, else the first registered
+    machine; the compare fan-out prices every registered machine and the
+    full table is kept on the plan for reporting (benchmarks/fig6).
+    """
+    if machine is None:
+        names = registered_names()
+        machine = "host_cpu" if "host_cpu" in names else names[0]
+    if hlo_text is None:
+        hlo_text = decode_step_hlo(cfg, batch, max_len, n_tokens=1)
+    reports = portmodel.compare(hlo_text)
+    per_machine = {name: rep.tier_bound_seconds(get_machine(name))
+                   for name, rep in reports.items()}
+    t_step = per_machine.get(machine)
+    if t_step is None:
+        t_step = portmodel.analyze(hlo_text, machine).tier_bound_seconds(
+            get_machine(machine))
+        per_machine[get_machine(machine).name] = t_step
+    chunk = 1 if t_step <= 0 else math.ceil(
+        dispatch_overhead_s / (overhead_frac * t_step))
+    chunk = max(1, min(max_chunk, chunk))
+    return ChunkPlan(chunk=chunk, machine=get_machine(machine).name,
+                     t_step_seconds=t_step, per_machine=per_machine)

@@ -1,0 +1,42 @@
+"""Slot-batched KV cache: preallocated once, updated in place per slot.
+
+The engine's cache is the ordinary model cache (``models.model.init_cache``)
+with the batch dimension reinterpreted as **slots**. Cache leaves under
+``"scan"`` are layer-stacked — their slot axis is 1; ``"tail"`` leaves
+carry the slot axis at 0. Admitting a request writes one prefilled
+slot-row into every leaf with a dynamic-update-slice (donated, so the
+multi-MB slot cache is never copied as batch composition changes — the
+whole point of slot preallocation over ``jnp.pad`` regrow).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+
+#: slot (batch) axis of cache leaves per top-level cache part
+SLOT_AXIS = {"scan": 1, "tail": 0}
+
+
+def make_insert_step(cfg: ModelConfig):
+    """Build ``insert(cache, one, slot) -> cache``.
+
+    ``one`` is a single-request cache (slot dim of size 1, same horizon);
+    ``slot`` a traced scalar int32, so one compilation serves every slot.
+    Donate ``cache`` at the jit boundary to keep the update in place.
+    """
+    del cfg  # structure is carried by the trees themselves
+
+    def insert(cache, one, slot):
+        out = {}
+        for part, axis in SLOT_AXIS.items():
+            if part not in cache:
+                continue
+            out[part] = jax.tree.map(
+                lambda big, small, a=axis: jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=a),
+                cache[part], one[part])
+        return out
+
+    return insert

@@ -5,27 +5,44 @@ Cache donation is the framework's "non-temporal store" analogue (DESIGN.md
 §2): without it every decode step would copy the whole multi-GB cache
 (a write-allocate at system scale); with donation the dynamic-update-slice
 happens in place.
+
+The continuous-batching engine (repro.serve) builds on these steps:
+``make_prefill_step(cfg, cache_len=H)`` preallocates the KV buffers at the
+full decode horizon inside the prefill graph (no post-hoc regrow), and
+``repro.serve.decode.make_chunked_decode_step`` generalizes
+:func:`make_decode_loop_step` with per-slot positions and in-graph
+temperature sampling.
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.train.step import model_inputs
 
 
-def make_prefill_step(cfg: ModelConfig):
+def make_prefill_step(cfg: ModelConfig, cache_len: int | None = None):
+    """Prefill step: (params, batch) -> (last-token logits, cache).
+
+    ``cache_len`` preallocates the attention KV buffers at the full decode
+    horizon inside the prefill graph — the serve engine's slot caches are
+    built once here instead of being regrown (copied) after the fact.
+    """
     def prefill(params, batch):
         logits, aux, cache = M.forward(cfg, params, model_inputs(cfg, batch),
-                                       mode="prefill")
+                                       mode="prefill", cache_len=cache_len)
         return logits, cache
     return prefill
 
 
 def make_decode_step(cfg: ModelConfig):
+    """Single-token decode step: (params, cache, batch, pos) -> (logits, cache).
+
+    ``pos`` may be a scalar (whole batch at one position) or a (B,) vector
+    (per-slot positions, continuous batching).
+    """
     def decode(params, cache, batch, pos):
         logits, aux, new_cache = M.forward(
             cfg, params, model_inputs(cfg, batch), mode="decode",
@@ -38,24 +55,20 @@ def make_decode_loop_step(cfg: ModelConfig, n_tokens: int):
     """Multi-token in-graph greedy decode (§Perf iteration for the
     collective-bound serve cells): the per-layer FSDP weight all-gather is
     loop-invariant, so XLA hoists it out of the token scan — one gather
-    per n_tokens instead of per token. Token-id models only."""
-    assert cfg.embed_inputs, "loop decode needs a token embedding"
+    per n_tokens instead of per token. Token-id models only.
 
-    def step(params, cache, batch, pos):
-        def body(carry, t):
-            cache, tok = carry
-            logits, _, cache = M.forward(cfg, params, {"tokens": tok},
-                                         mode="decode", cache=cache,
-                                         pos=pos + t)
-            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-            return (cache, nxt), nxt[:, 0]
+    Thin greedy wrapper over the generalized chunked decode step
+    (repro.serve.decode) kept for the dryrun/perf call sites.
+    """
+    from repro.serve.decode import make_chunked_decode_step
+    step = make_chunked_decode_step(cfg, n_tokens, temperature=0.0)
 
-        (cache, _), toks = jax.lax.scan(
-            body, (cache, batch["tokens"]),
-            jnp.arange(n_tokens, dtype=jnp.int32))
-        return jnp.swapaxes(toks, 0, 1), cache
+    def loop(params, cache, batch, pos):
+        toks, cache, _pos = step(params, cache, batch["tokens"], pos,
+                                 jax.random.PRNGKey(0))
+        return toks, cache
 
-    return step
+    return loop
 
 
 def serve_uses_fsdp(cfg: ModelConfig, tp: int = 16,
