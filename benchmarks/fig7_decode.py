@@ -1,0 +1,192 @@
+"""Fig. 7 (extension): split-KV decode cost scales with cache occupancy,
+not horizon — predicted vs measured, dense vs kernel path.
+
+The serve engine preallocates KV slots at the full decode horizon, so
+the dense decode path reads and masks every ``max_len`` cache row per
+slot per token regardless of how full the cache is. The split-KV
+flash-decode path (repro.kernels.attention) bounds that traffic by
+occupancy: KV blocks wholly beyond a slot's position are skipped, so a
+step at 12% occupancy moves ~12% of the bytes. This benchmark sweeps
+cache occupancy x batch on the host and records, per cell:
+
+* measured per-step decode time and tokens/s of the dense path and of
+  the occupancy-bounded kernel path (both through the serve chunked
+  decode step — the real dispatch, cache donation included);
+* the per-machine *predicted* step times for both paths
+  (``serve.planner.plan_chunk_size`` with and without ``occupancy``);
+* the per-machine predicted KV-read traffic ratio dense/split
+  (``serve.kv_traffic.decode_read_traffic``) — the WA-lesson headline
+  number, > 1 whenever the cache is not full.
+
+Two assertions gate CI: the measured split-path step cost must grow
+with occupancy while beating the dense path at occupancy <= 25% of the
+horizon, and the predicted read ratio must exceed 1 on all three paper
+CPUs. As with fig6, the host measurement is a functional anchor, not a
+cross-vendor validation — the record keeps predicted and measured side
+by side so real hardware can score them (paper Fig. 3 methodology).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import model as M
+from repro.serve.decode import make_chunked_decode_step
+from repro.serve.kv_traffic import decode_read_traffic
+from repro.serve.planner import kv_read_seconds, plan_chunk_size
+
+ARCH = "yi-9b"                 # pure-GQA attention stack: clean KV story
+PAPER_CPUS = ("zen4", "golden_cove", "neoverse_v2")
+
+
+#: tokens per measured dispatch — amortizes the multi-ms CPU dispatch
+#: overhead so the per-step attention term is the signal, not the noise
+CHUNK = 8
+
+
+def _measure_pair(steps: dict, params, caches: dict, tok, pos, key,
+                  iters: int) -> dict:
+    """Best-of-N wall seconds per path, sampled *interleaved* (A/B/A/B)
+    so container load drift hits both paths alike; min is the
+    noise-robust estimator for container microbenchmarks."""
+    for _ in range(3):                                       # compile + warm
+        for name, fn in steps.items():
+            toks, caches[name], _ = fn(params, caches[name], tok, pos,
+                                       key)
+            jax.block_until_ready(toks)
+    times = {name: [] for name in steps}
+    for _ in range(iters):
+        for name, fn in steps.items():
+            t0 = time.perf_counter()
+            toks, caches[name], _ = fn(params, caches[name], tok, pos,
+                                       key)
+            jax.block_until_ready(toks)
+            times[name].append(time.perf_counter() - t0)
+    return {name: float(np.min(ts)) for name, ts in times.items()}
+
+
+def decode_record(batch: int, max_len: int, occupancies: tuple,
+                  iters: int = 20) -> dict:
+    """Measure dense vs split-KV decode dispatches across occupancies.
+
+    Each dispatch decodes a CHUNK-token in-graph chunk whose last token
+    lands at the cell's occupancy; recorded times are per *token*.
+    """
+    cfg = get_smoke_config(ARCH)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    dense_step = jax.jit(make_chunked_decode_step(cfg, CHUNK),
+                         donate_argnums=(1,))
+    cells = []
+    for occ in occupancies:
+        pos = jnp.full((batch,), occ - CHUNK, jnp.int32)
+        split_step = jax.jit(
+            make_chunked_decode_step(cfg, CHUNK, attn_impl="auto",
+                                     kv_len=occ),
+            donate_argnums=(1,))
+        t = _measure_pair(
+            {"dense": dense_step, "split": split_step}, params,
+            {"dense": M.init_cache(cfg, batch, max_len),
+             "split": M.init_cache(cfg, batch, max_len)},
+            tok, pos, key, iters)
+        t_dense, t_split = t["dense"] / CHUNK, t["split"] / CHUNK
+        plan_split = plan_chunk_size(cfg, batch, max_len, occupancy=occ)
+        cells.append({
+            "occ": occ, "occ_frac": occ / max_len,
+            "t_dense": t_dense, "t_split": t_split,
+            "tok_s_dense": batch / t_dense, "tok_s_split": batch / t_split,
+            "pred_split": dict(plan_split.per_machine),
+            "pred_dense": dict(plan_split.per_machine_dense),
+        })
+    kv = decode_read_traffic(cfg, batch, max_len,
+                             max(1, occupancies[0]))
+    return {"arch": ARCH, "batch": batch, "max_len": max_len,
+            "cells": cells, "kv_rows": kv}
+
+
+def paper_scale_lines(batch: int = 8, max_len: int = 4096,
+                      occ: int = 512) -> list:
+    """Per-machine predicted KV-stream seconds at the *published* model
+    scale (no lowering/measurement — pure ladder arithmetic), where the
+    KV term actually dominates the decode step and the dense-vs-split
+    gap is the figure's headline."""
+    cfg = get_config(ARCH)
+    lines = []
+    for name in PAPER_CPUS:
+        t_dense = kv_read_seconds(cfg, batch, max_len, name,
+                                  max_len=max_len)
+        t_split = kv_read_seconds(cfg, batch, occ, name, max_len=max_len)
+        lines.append(
+            f"fig7,pred_kv_full.{name},{t_split*1e6:.0f},"
+            f"dense_us={t_dense*1e6:.0f};"
+            f"speedup={t_dense/max(t_split, 1e-12):.2f};"
+            f"arch={ARCH};batch={batch};max_len={max_len};occ={occ}")
+    return lines
+
+
+def main(quick: bool = False):
+    """Emit the fig7 decode table as benchmark CSV lines."""
+    max_len = 1024 if quick else 2048
+    occupancies = tuple(max_len * f // 16 for f in (1, 4, 8, 16))
+    batches = (4,) if quick else (2, 4)
+    lines = []
+    for batch in batches:
+        rec = decode_record(batch, max_len, occupancies,
+                            iters=10 if quick else 20)
+        for c in rec["cells"]:
+            tag = f"b{batch}.occ{c['occ']}"
+            lines.append(
+                f"fig7,measured.dense.{tag},{c['t_dense']*1e6:.0f},"
+                f"tok_s={c['tok_s_dense']:.1f};occ_frac={c['occ_frac']:.2f}")
+            lines.append(
+                f"fig7,measured.split.{tag},{c['t_split']*1e6:.0f},"
+                f"tok_s={c['tok_s_split']:.1f};occ_frac={c['occ_frac']:.2f}")
+            for name in PAPER_CPUS:
+                if name not in c["pred_split"]:
+                    continue
+                lines.append(
+                    f"fig7,pred.{name}.{tag},"
+                    f"{c['pred_split'][name]*1e6:.2f},"
+                    f"dense_us={c['pred_dense'][name]*1e6:.2f};"
+                    f"speedup={c['pred_dense'][name]/c['pred_split'][name]:.2f}")
+        for r in rec["kv_rows"]:
+            if r["machine"] not in PAPER_CPUS:
+                continue
+            lines.append(
+                f"fig7,kv_ratio.b{batch}.{r['machine']},0,"
+                f"dense_over_split={r['read_ratio']:.2f};bk={r['bk']};"
+                f"n_splits={r['n_splits']};occ={r['occupancy']}")
+
+        # gates: occupancy-bounded cost must (a) grow with occupancy,
+        # (b) beat the dense path while the cache is <= 25% full, and
+        # (c) save predicted KV reads on every paper CPU
+        cells = rec["cells"]
+        lo, hi = cells[0], cells[-1]
+        if not lo["t_split"] < hi["t_split"]:
+            raise AssertionError(
+                f"split cost not occupancy-bound: {lo['t_split']:.2e}s at "
+                f"occ {lo['occ']} vs {hi['t_split']:.2e}s at {hi['occ']}")
+        bad = [c["occ"] for c in cells
+               if c["occ_frac"] <= 0.25 and not c["t_split"] < c["t_dense"]]
+        if bad:
+            raise AssertionError(
+                f"split path loses to dense at low occupancy: {bad}")
+        bad = [r["machine"] for r in rec["kv_rows"]
+               if r["machine"] in PAPER_CPUS and not r["read_ratio"] > 1]
+        if bad:
+            raise AssertionError(f"KV read ratio <= 1 on: {bad}")
+        lines.append(f"fig7,gates.b{batch},0,"
+                     f"occupancy_bound=OK;low_occ_beats_dense=OK;"
+                     f"kv_ratio_gt1=OK")
+    lines.extend(paper_scale_lines())
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=True)))

@@ -14,7 +14,7 @@ import traceback
 
 MODULES = ("table1_machines", "table2_ports", "table3_instructions",
            "fig2_unitmix", "fig3_rpe", "fig4_wa", "fig5_memladder",
-           "fig6_serve", "roofline_sweep")
+           "fig6_serve", "fig7_decode", "roofline_sweep")
 
 
 def main() -> None:

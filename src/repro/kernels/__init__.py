@@ -1,3 +1,44 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel suite shared plumbing: backend detection and impl routing.
+
+Every kernel package under ``repro.kernels`` exposes jitted public
+wrappers (``ops.py``) whose ``impl`` argument selects between the
+Pallas kernel and a pure-jnp reference. The backend probe and the
+``impl`` resolution rules live here so the packages cannot drift:
+
+* ``impl="ref"``   — always the reference implementation.
+* ``impl="pallas"`` — always the Pallas kernel; off-TPU it runs in
+  interpret mode (slow, numerics-faithful — the CI parity path).
+* ``impl="auto"``  — Pallas on TPU, reference elsewhere (the reference
+  is what XLA would fuse anyway; the kernel exists to control tiling
+  and traffic explicitly on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas(impl: str) -> bool:
+    """Resolve an ``impl`` string to "run the Pallas kernel?".
+
+    ``interpret_mode()`` tells the kernel how to run when this returns
+    True. Unknown impl strings raise so typos fail loudly.
+    """
+    if impl not in ("ref", "pallas", "auto"):
+        raise ValueError(f"unknown impl {impl!r} "
+                         "(expected 'ref', 'pallas', or 'auto')")
+    if impl == "ref":
+        return False
+    if impl == "pallas":
+        return True
+    return on_tpu()
+
+
+def interpret_mode() -> bool:
+    """Pallas kernels run in interpret mode everywhere but real TPUs."""
+    return not on_tpu()

@@ -1,0 +1,238 @@
+"""Pallas TPU split-KV flash-decode kernel (GQA, per-slot positions).
+
+The serve engine preallocates KV slots at the full decode horizon
+(repro.serve), so the reference ``decode_attention`` reads and masks
+**every** ``max_len`` cache row for every slot on every token — a slot
+at ``pos=3`` pays the same DMA bill as one at ``pos=4095``, and the
+dense ``(B, Hkv, G, 1, Skv)`` score tensor round-trips HBM at fusion
+boundaries. This kernel is the WA-evasion-spirited fix at decode scale
+(the CloverLeaf lesson: never move bytes you don't need):
+
+* KV is tiled over the innermost grid dimension with **block-level
+  early-out** — ``pl.when`` skips every KV block wholly beyond a
+  slot's position (and, with a sliding window, wholly before it), so
+  per-step work scales with cache *occupancy*, not horizon.
+* The online-softmax accumulators (m, l, acc) live in VMEM scratch and
+  never touch HBM; queries are a single token, so all GQA heads are
+  packed into one ``(Hkv·G, Dh)`` tile (``(Sq·Hkv·G, Dh)`` for short
+  multi-token tiles) instead of wasting a grid dimension on
+  sub-sublane head tiles.
+* Long caches shard over ``n_splits`` KV splits (flash-decoding): each
+  split accumulates its own partial (m, l, acc) and a cross-split
+  combine merges them outside the kernel.
+
+Grid: (batch, n_splits, kv_blocks_per_split), KV innermost. ``pos`` is
+scalar-prefetched so both the kernel and its masks see every slot's
+position before any block work is issued.
+
+Tile sizes come from the MemTier-driven autotuner
+(``repro.kernels.tuning``), not constants; routing and CPU fallbacks
+live in ``repro.kernels.attention.ops``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_scr, m_scr, l_scr, *, bk, bps, sq, g, hkv, scale,
+                   window):
+    """One (batch, split, kv-block) grid step of split-KV flash decode.
+
+    Scratch carries the online-softmax state across the innermost
+    (kv-block) grid dimension; rows of the packed query tile are
+    ordered (Sq major, G minor) per kv head.
+    """
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    pos_b = pos_ref[b]
+    start = (s * bps + ik) * bk
+    # block-level early-out: skip blocks wholly beyond the slot's last
+    # query position (and wholly before its window, when sliding)
+    live = start <= pos_b + (sq - 1)
+    if window is not None:
+        live = jnp.logical_and(live, start + bk - 1 > pos_b - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (Sq, H, dh)
+        dh = q.shape[-1]
+        # pack to (hkv, Sq*g, dh): kv-head batched, (Sq, g) rows minor
+        qp = q.reshape(sq, hkv, g, dh).transpose(1, 0, 2, 3)
+        qp = qp.reshape(hkv, sq * g, dh)
+        k = k_ref[0].astype(jnp.float32).transpose(1, 0, 2)  # (hkv,bk,dh)
+        v = v_ref[0].astype(jnp.float32).transpose(1, 0, 2)
+        st = jax.lax.dot_general(qp, k, (((2,), (2,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+        k_pos = start + jax.lax.iota(jnp.int32, bk)     # (bk,)
+        # row j of the Sq tile queries absolute position pos_b + j
+        q_pos = pos_b + jax.lax.iota(jnp.int32, sq * g) // g
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask = jnp.logical_and(
+                mask, k_pos[None, :] > q_pos[:, None] - window)
+        st = jnp.where(mask[None], st, NEG_INF)         # (hkv,Sq*g,bk)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, st.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(st - m_new[..., None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == bps - 1)
+    def _finalize():
+        dh = acc_scr.shape[-1]
+        # unpack (hkv, Sq*g, ·) back to (Sq, H, ·)
+        def unpack(x, trail):
+            y = x.reshape((hkv, sq, g) + trail)
+            return y.transpose((1, 0, 2) + tuple(
+                3 + i for i in range(len(trail))))
+        o_ref[0, 0] = unpack(acc_scr[...], (dh,)).reshape(sq, hkv * g, dh)
+        m_ref[0, 0] = unpack(m_scr[...], ()).reshape(sq, hkv * g)
+        l_ref[0, 0] = unpack(l_scr[...], ()).reshape(sq, hkv * g)
+
+
+def flash_decode(q, k, v, pos, *, window: int | None = None,
+                 bk: int = 128, n_splits: int = 1,
+                 interpret: bool = False) -> jax.Array:
+    """Split-KV flash decode against a fixed-horizon KV cache.
+
+    q: (B, Sq, H, Dh) — the current decode token(s); k, v: (B, Skv,
+    Hkv, Dh) slot caches. ``pos`` is the absolute position of the
+    *first* query token — a scalar, or a (B,) vector when slots decode
+    at independent positions (continuous batching); query token ``j``
+    attends cache rows ``<= pos + j`` (all Sq new keys are already in
+    the cache, as in the model's decode flow). Returns (B, Sq, H, Dh)
+    in q's dtype.
+
+    ``Skv`` need not divide ``bk``: the cache is padded up to the
+    block grid and padded rows are causally masked (``pos < Skv``
+    always). Splits partition the KV blocks; each split's partial
+    (m, l, acc) is merged by :func:`combine_splits`.
+    """
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    assert h == hkv * g and sq >= 1
+    bk = max(1, min(bk, max(skv, 1)))
+    nb = math.ceil(skv / bk)
+    n_splits = max(1, min(n_splits, nb))
+    bps = math.ceil(nb / n_splits)
+    skv_pad = n_splits * bps * bk
+    if skv_pad > skv:
+        padding = [(0, 0), (0, skv_pad - skv), (0, 0), (0, 0)]
+        k = jnp.pad(k, padding)
+        v = jnp.pad(v, padding)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(
+        _decode_kernel, bk=bk, bps=bps, sq=sq, g=g, hkv=hkv, scale=scale,
+        window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_splits, bps),
+        in_specs=[
+            pl.BlockSpec((1, sq, h, dh), lambda b_, s, ik, p: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, bk, hkv, dh),
+                         lambda b_, s, ik, p, n=bps:
+                         (b_, s * n + ik, 0, 0)),
+            pl.BlockSpec((1, bk, hkv, dh),
+                         lambda b_, s, ik, p, n=bps:
+                         (b_, s * n + ik, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, sq, h, dh),
+                         lambda b_, s, ik, p: (s, b_, 0, 0, 0)),
+            pl.BlockSpec((1, 1, sq, h), lambda b_, s, ik, p: (s, b_, 0, 0)),
+            pl.BlockSpec((1, 1, sq, h), lambda b_, s, ik, p: (s, b_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hkv, sq * g, dh), jnp.float32),
+            pltpu.VMEM((hkv, sq * g), jnp.float32),
+            pltpu.VMEM((hkv, sq * g), jnp.float32),
+        ])
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_splits, b, sq, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((n_splits, b, sq, h), jnp.float32),
+            jax.ShapeDtypeStruct((n_splits, b, sq, h), jnp.float32),
+        ],
+        interpret=interpret)(pos_arr, q, k, v)
+    return combine_splits(o_part, m_part, l_part).astype(q.dtype)
+
+
+def combine_splits(o_part, m_part, l_part) -> jax.Array:
+    """Merge per-split partial softmax states (flash-decoding combine).
+
+    o_part: (S, B, Sq, H, Dh) unnormalized accumulators; m_part /
+    l_part: (S, B, Sq, H) running max / sum per split. Splits whose
+    blocks were all skipped carry (m=NEG_INF, l=0) and contribute
+    exactly zero weight. Returns (B, Sq, H, Dh) f32.
+    """
+    m_max = m_part.max(axis=0)                           # (B,Sq,H)
+    w = jnp.exp(m_part - m_max[None])                    # dead split -> 0
+    l_tot = (l_part * w).sum(axis=0)
+    o = (o_part * w[..., None]).sum(axis=0)
+    return o / jnp.maximum(l_tot, 1e-30)[..., None]
+
+
+def ref_decode(q, k, v, pos, *, window: int | None = None,
+               kv_len: int | None = None) -> jax.Array:
+    """Occupancy-bounded pure-JAX oracle for :func:`flash_decode`.
+
+    Numerically the dense masked-GQA decode, but — like the kernel's
+    block early-out — it only ever touches the first ``kv_len`` cache
+    rows (a static bound the caller derives from occupancy, rounded to
+    the block grid). With ``kv_len=None`` it degrades to the dense
+    full-horizon read. This is the off-TPU execution path the ops
+    router uses, and the parity target the kernel is tested against.
+    """
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    if kv_len is not None:
+        kv_len = max(1, min(int(kv_len), skv))
+        k = k[:, :kv_len]
+        v = v[:, :kv_len]
+        skv = kv_len
+    qg = q.reshape(b, sq, hkv, g, dh) * (1.0 / math.sqrt(dh))
+    st = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                    preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(skv)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1),
+                            (b, 1))
+    q_pos = posb + jnp.arange(sq)[None, :]               # (B, Sq)
+    mask = k_pos[None, None, :] <= q_pos[..., None]      # (B, Sq, Skv)
+    if window is not None:
+        mask &= k_pos[None, None, :] > (q_pos[..., None] - window)
+    st = jnp.where(mask[:, None, None, :, :], st, NEG_INF)
+    p = jax.nn.softmax(st, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, dh).astype(q.dtype)

@@ -83,13 +83,26 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
 
 
-def flash_attention(q, k, v, *, bq: int = 512, bk: int = 512,
-                    causal: bool = True, window: int | None = None,
+def flash_attention(q, k, v, *, bq: int | None = None,
+                    bk: int | None = None, causal: bool = True,
+                    window: int | None = None,
                     interpret: bool = False) -> jax.Array:
-    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh) -> (B, H, S, Dh)."""
+    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh) -> (B, H, S, Dh).
+
+    ``bq``/``bk`` default to the MemTier-autotuned tiling for the
+    default target machine (``repro.kernels.tuning``) — the historical
+    hardcoded 512s survive only as an explicit caller choice.
+    """
     b, h, s, dh = q.shape
     hkv = k.shape[1]
     g = h // hkv
+    if bq is None or bk is None:
+        from repro.kernels import tuning
+        plan = tuning.flash_tiles(tuning.default_machine(), s=s, dh=dh,
+                                  h=h, hkv=hkv, dtype=str(q.dtype))
+        # snap to divisors of s — the grid below requires exact tiling
+        bq = bq or tuning.fit_block(plan.bq, s)
+        bk = bk or tuning.fit_block(plan.bk, s)
     bq = min(bq, s)
     bk = min(bk, s)
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)

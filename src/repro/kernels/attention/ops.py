@@ -1,29 +1,53 @@
-"""Public flash-attention wrapper with impl routing and a BHSD<->BSHD
-adapter for the model stack (models use (B, S, H, Dh))."""
+"""Public attention-kernel wrappers: impl routing, MemTier-autotuned
+tile defaults, and a BHSD<->BSHD adapter for the model stack.
+
+Tile sizes are no longer hardcoded: when a caller does not pin
+``bq``/``bk``/``n_splits``, the MemTier-driven autotuner
+(``repro.kernels.tuning``) prices the candidates against the target
+machine's memory ladder and the cheapest tiling wins. ``impl`` follows
+the suite-wide rules in ``repro.kernels``: ``ref`` / ``pallas``
+(interpret mode off-TPU) / ``auto`` (Pallas on TPU, reference
+elsewhere).
+"""
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import interpret_mode, use_pallas
+from repro.kernels import tuning
+from repro.kernels.attention import decode as D
 from repro.kernels.attention import flash as F
 from repro.kernels.attention import ref as R
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "impl", "bq", "bk"))
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "bq", "bk",
+                                   "machine"))
 def flash_attention(q, k, v, *, causal=True, window=None, impl="auto",
-                    bq=512, bk=512):
-    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh)."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+                    bq=None, bk=None, machine=None):
+    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh).
+
+    ``bq``/``bk`` default to the autotuned tiling for ``machine``
+    (``tuning.default_machine()`` when unset) instead of the old
+    hardcoded 512s.
+    """
+    if not use_pallas(impl):
         return R.attention(q, k, v, causal=causal, window=window)
+    _, h, s, dh = q.shape
+    if bq is None or bk is None:
+        plan = tuning.flash_tiles(machine or tuning.default_machine(),
+                                  s=s, dh=dh, h=h, hkv=k.shape[1],
+                                  dtype=str(q.dtype))
+        bq = bq or tuning.fit_block(plan.bq, s)
+        bk = bk or tuning.fit_block(plan.bk, s)
     return F.flash_attention(q, k, v, bq=bq, bk=bk, causal=causal,
-                             window=window, interpret=not _on_tpu())
+                             window=window, interpret=interpret_mode())
 
 
 def flash_attention_bshd(q, k, v, **kw):
@@ -31,3 +55,43 @@ def flash_attention_bshd(q, k, v, **kw):
     o = flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
                         jnp.swapaxes(v, 1, 2), **kw)
     return jnp.swapaxes(o, 1, 2)
+
+
+def flash_decode(q, k, v, pos, *, window=None, impl="auto", bk=None,
+                 n_splits=None, kv_len=None, machine=None):
+    """Split-KV decode against a fixed-horizon KV cache, impl-routed.
+
+    q: (B, Sq, H, Dh) — the model stack's decode layout; k, v: (B,
+    Skv, Hkv, Dh); ``pos`` scalar or (B,) (see
+    ``kernels.attention.decode.flash_decode``). ``kv_len`` is the
+    static occupancy bound — the highest cache row any slot can touch
+    this step (``max(pos) + Sq``); rows past it are never read, which
+    is the kernel's block early-out expressed as a shape. It is
+    rounded up to the KV block grid and clamped to ``Skv``.
+
+    ``bk``/``n_splits`` default to the autotuned decode tiling for
+    ``machine``. Routing: ``pallas`` runs the kernel (interpret mode
+    off-TPU); ``ref``/``auto``-off-TPU run the occupancy-bounded
+    pure-JAX oracle — same traffic bound, XLA-fused. Designed to be
+    called under an enclosing ``jax.jit`` (the decode step), so it is
+    not jitted itself.
+    """
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    bound = skv if kv_len is None else max(1, min(int(kv_len), skv))
+    if bk is None or n_splits is None:
+        plan = tuning.decode_tiles(machine or tuning.default_machine(),
+                                   skv=bound, dh=dh, h=h, hkv=hkv,
+                                   batch=b, dtype=str(q.dtype))
+        bk = bk or plan.bk
+        n_splits = n_splits or plan.n_splits
+    bk = max(1, min(bk, skv))
+    if kv_len is not None:
+        bound = min(math.ceil(bound / bk) * bk, skv)
+        k = k[:, :bound]
+        v = v[:, :bound]
+    if use_pallas(impl):
+        return D.flash_decode(q, k, v, pos, window=window, bk=bk,
+                              n_splits=n_splits,
+                              interpret=interpret_mode())
+    return D.ref_decode(q, k, v, pos, window=window)

@@ -13,26 +13,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import interpret_mode, use_pallas
 from repro.kernels.stream import kernels as K
 from repro.kernels.stream import ref as R
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def _route(pallas_fn, ref_fn, impl, *args, **kw):
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if not use_pallas(impl):
         return ref_fn(*args, **kw)
-    interpret = not _on_tpu()
-    return pallas_fn(*args, interpret=interpret, **kw)
+    return pallas_fn(*args, interpret=interpret_mode(), **kw)
 
 
 @partial(jax.jit, static_argnames=("shape", "dtype", "impl"))
 def init(shape, scalar=3.0, dtype=jnp.float32, impl="auto"):
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if not use_pallas(impl):
         return R.init(shape, scalar, dtype)
-    return K.init_store(shape, scalar, dtype, interpret=not _on_tpu())
+    return K.init_store(shape, scalar, dtype, interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("impl",))
@@ -67,9 +63,9 @@ def sum_reduction(a, impl="auto"):
 
 @partial(jax.jit, static_argnames=("n", "impl"))
 def pi_integration(n, impl="auto"):
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if not use_pallas(impl):
         return R.pi_integration(n)
-    return K.pi_integration(n, interpret=not _on_tpu())
+    return K.pi_integration(n, interpret=interpret_mode())
 
 
 @partial(jax.jit, static_argnames=("impl",))
@@ -84,6 +80,6 @@ def jacobi_3d7pt(u, impl="auto"):
 
 @partial(jax.jit, static_argnames=("sweeps", "impl"))
 def gauss_seidel_2d5pt(u, sweeps=1, impl="auto"):
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+    if not use_pallas(impl):
         return R.gauss_seidel_2d5pt(u, sweeps)
-    return K.gauss_seidel_2d5pt(u, sweeps, interpret=not _on_tpu())
+    return K.gauss_seidel_2d5pt(u, sweeps, interpret=interpret_mode())

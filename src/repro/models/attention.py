@@ -134,7 +134,8 @@ def chunked_causal_attention(q, k, v, *, q_chunk: int = 512,
     return jnp.concatenate(outs, axis=1)
 
 
-def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None
+def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None,
+                     impl: str = "ref", kv_len: int | None = None
                      ) -> jax.Array:
     """Single-token decode: q (B, 1, H, Dh) vs cache (B, Skv, Hkv, Dh).
 
@@ -144,7 +145,21 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None
     the cache sequence dim sharded over the "model" mesh axis, XLA SPMD
     turns the softmax/value reductions into cross-device psums
     (distributed flash-decoding).
+
+    ``impl`` routes through the kernel suite
+    (``repro.kernels.attention.ops.flash_decode``): ``"pallas"`` runs the
+    split-KV flash-decode kernel (interpret mode off-TPU), ``"auto"``
+    picks it on TPU, and ``kv_len`` — the static occupancy bound
+    (``max(pos) + 1``, rounded up to the KV block grid by the router) —
+    caps how much of the horizon is ever read on any routed path. The
+    plain ``"ref"`` default below stays inline: the dense full-horizon
+    read whose traffic the split-KV kernel exists to avoid, kept as the
+    oracle it is validated against.
     """
+    if impl != "ref" or kv_len is not None:
+        from repro.kernels.attention import ops as kops
+        return kops.flash_decode(q, k_cache, v_cache, pos, window=window,
+                                 impl=impl, kv_len=kv_len)
     b, _, h, dh = q.shape
     skv, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv

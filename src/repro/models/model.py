@@ -369,7 +369,8 @@ def _project(x, w, b=None):
 
 
 def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
-                positions, cache, pos, cache_len: int | None = None):
+                positions, cache, pos, cache_len: int | None = None,
+                attn_impl: str | None = None, kv_len: int | None = None):
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_eff
     q = _project(x, p["wq"], p.get("bq"))
@@ -399,7 +400,9 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
                     c, u, i, axis=0))
             kc = row_dus(cache["k"], k.astype(cache["k"].dtype), pos)
             vc = row_dus(cache["v"], v.astype(cache["v"].dtype), pos)
-        y = attn_lib.decode_attention(q, kc, vc, pos, window=window)
+        y = attn_lib.decode_attention(q, kc, vc, pos, window=window,
+                                      impl=attn_impl or "ref",
+                                      kv_len=kv_len)
         new_cache = {"k": kc, "v": vc}
     else:
         y = attn_lib.chunked_causal_attention(
@@ -447,14 +450,16 @@ def _slstm_mixer(cfg, p, x, *, mode, cache):
 
 
 def apply_block(cfg: ModelConfig, blk: str, p: dict, x, *, mode: str,
-                positions, cache, pos, cache_len: int | None = None):
+                positions, cache, pos, cache_len: int | None = None,
+                attn_impl: str | None = None, kv_len: int | None = None):
     """Returns (x_out, aux_loss, new_cache)."""
     mixer, ffn = blk.split(":")
     hx = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     if mixer in ("attn", "attn_local"):
         y, new_cache = _attn_mixer(cfg, p["mixer"], hx, local=(mixer == "attn_local"),
                                    mode=mode, positions=positions,
-                                   cache=cache, pos=pos, cache_len=cache_len)
+                                   cache=cache, pos=pos, cache_len=cache_len,
+                                   attn_impl=attn_impl, kv_len=kv_len)
     elif mixer == "mamba":
         y, new_cache = _mamba_mixer(cfg, p["mixer"], hx, mode=mode, cache=cache)
     elif mixer == "mlstm":
@@ -491,7 +496,8 @@ def _remat_wrap(cfg, fn):
 
 
 def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
-            cache: dict | None = None, pos=None, cache_len: int | None = None):
+            cache: dict | None = None, pos=None, cache_len: int | None = None,
+            attn_impl: str | None = None, kv_len: int | None = None):
     """Run the model.
 
     batch: {"tokens": (B,S) int32} or {"embeds": (B,S,d)}; optional
@@ -503,6 +509,11 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
           "decode" -> (logits, cache); S==1, `pos` required — scalar int32,
                       or (B,) int32 for per-slot positions (continuous
                       batching: each row attends/updates at its own pos).
+                      `attn_impl` routes decode attention through the
+                      split-KV kernel suite ("ref"/"pallas"/"auto", see
+                      models.attention.decode_attention) and `kv_len`
+                      statically bounds how much of the cache horizon a
+                      step may read (occupancy bound, repro.serve).
     Returns logits (B, S, V) plus aux-loss scalar as (logits, aux[, cache]).
     """
     if cfg.embed_inputs:
@@ -547,7 +558,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
                 x, a, nc = apply_block(cfg, blk, p_r[str(j)], x,
                                        mode=mode, positions=positions,
                                        cache=c_r[str(j)], pos=pos,
-                                       cache_len=cache_len)
+                                       cache_len=cache_len,
+                                       attn_impl=attn_impl, kv_len=kv_len)
                 aux_total = aux_total + a
                 new_slices[str(j)] = nc
             new_slices_all.append(new_slices)
@@ -565,7 +577,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
                 x, a, nc = apply_block(cfg, blk, p_slice[str(j)], x,
                                        mode=mode, positions=positions,
                                        cache=cj, pos=pos,
-                                       cache_len=cache_len)
+                                       cache_len=cache_len,
+                                       attn_impl=attn_impl, kv_len=kv_len)
                 aux = aux + a
                 if nc is not None:
                     new_slices[str(j)] = nc
@@ -587,7 +600,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
         ci = cache["tail"][str(i)] if (cache is not None and mode == "decode") else None
         x, a, nc = apply_block(cfg, blk, params["tail"][str(i)], x,
                                mode=mode, positions=positions,
-                               cache=ci, pos=pos, cache_len=cache_len)
+                               cache=ci, pos=pos, cache_len=cache_len,
+                               attn_impl=attn_impl, kv_len=kv_len)
         aux_total = aux_total + a
         if nc is not None and mode in ("prefill", "decode"):
             new_cache["tail"][str(i)] = nc

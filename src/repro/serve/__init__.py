@@ -19,14 +19,17 @@ reported per machine (``repro.serve.kv_traffic``).
 
 from repro.serve.decode import make_chunked_decode_step
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.kv_traffic import kv_update_traffic
-from repro.serve.planner import ChunkPlan, decode_step_hlo, plan_chunk_size
+from repro.serve.kv_traffic import decode_read_traffic, kv_update_traffic
+from repro.serve.planner import (ChunkPlan, decode_step_hlo,
+                                 kv_read_seconds, plan_chunk_size)
 
 __all__ = [
     "ChunkPlan",
     "Request",
     "ServeEngine",
+    "decode_read_traffic",
     "decode_step_hlo",
+    "kv_read_seconds",
     "kv_update_traffic",
     "make_chunked_decode_step",
     "plan_chunk_size",

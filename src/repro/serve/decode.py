@@ -20,7 +20,9 @@ from repro.models import model as M
 
 
 def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
-                             temperature: float = 0.0):
+                             temperature: float = 0.0,
+                             attn_impl: str | None = None,
+                             kv_len: int | None = None):
     """Build the n-token decode chunk: one dispatch, n in-graph steps.
 
     Returns ``step(params, cache, tokens, pos, key) -> (toks, cache, pos)``
@@ -28,6 +30,15 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
     a scalar or (B,) int32 (each slot's write position), and ``key`` a
     PRNG key consumed only when ``temperature > 0``. ``toks`` is
     (B, n_tokens): the next n tokens of every slot. Token-id models only.
+
+    ``attn_impl`` routes decode attention through the split-KV kernel
+    suite and ``kv_len`` is the *static* occupancy bound for the whole
+    chunk — no slot may write past it, so it must cover
+    ``max(pos) + n_tokens`` (the engine fixes one bound for its
+    lifetime and rejects requests beyond it; each distinct ``kv_len``
+    is its own compilation). Token ``i`` of the chunk reads at most
+    ``kv_len`` cache rows instead of the full horizon — the split-KV
+    traffic bound at dispatch granularity.
     """
     assert cfg.embed_inputs, "chunked decode needs a token embedding"
     assert n_tokens >= 1
@@ -37,7 +48,8 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
             cache, tok, pos, key = carry
             logits, _, new_cache = M.forward(cfg, params, {"tokens": tok},
                                             mode="decode", cache=cache,
-                                            pos=pos)
+                                            pos=pos, attn_impl=attn_impl,
+                                            kv_len=kv_len)
             # some mixers emit recurrent state in compute dtype (bf16);
             # the cache contract (model.cache_shapes) carries them f32 —
             # pin the scan carry to the contract's dtypes

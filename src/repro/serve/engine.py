@@ -62,18 +62,28 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, chunk: int | None = None,
                  temperature: float = 0.0, seed: int = 0,
-                 machine: str | None = None):
+                 machine: str | None = None,
+                 attn_impl: str | None = None,
+                 kv_len: int | None = None):
         assert cfg.embed_inputs, "serve engine needs a token-id model"
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = float(temperature)
+        # attn_impl routes decode attention through the split-KV kernel
+        # suite; kv_len is a static occupancy bound for the engine's
+        # lifetime (no request may decode past it) — when set, the
+        # planner prices the occupancy-bounded kernel step instead of
+        # the dense full-horizon one.
+        self.attn_impl, self.kv_len = attn_impl, kv_len
         if chunk is None:
             chunk = plan_chunk_size(cfg, max_slots, max_len,
-                                    machine=machine).chunk
+                                    machine=machine,
+                                    occupancy=kv_len).chunk
         self.chunk = max(1, int(chunk))
         self.cache = M.init_cache(cfg, max_slots, max_len)
         self._decode = jax.jit(
-            make_chunked_decode_step(cfg, self.chunk, self.temperature),
+            make_chunked_decode_step(cfg, self.chunk, self.temperature,
+                                     attn_impl=attn_impl, kv_len=kv_len),
             donate_argnums=(1,))
         self._insert = jax.jit(make_insert_step(cfg), donate_argnums=(0,))
         # jit retraces per prompt length/batch shape on its own — one
@@ -107,11 +117,13 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: max_new_tokens must be >= 1 "
                 f"(got {req.max_new_tokens})")
-        if prompt_len + req.max_new_tokens - 1 > self.max_len:
+        horizon = self.max_len if self.kv_len is None \
+            else min(self.max_len, self.kv_len)
+        if prompt_len + req.max_new_tokens - 1 > horizon:
             raise ValueError(
                 f"request {req.rid}: prompt {prompt_len} + "
                 f"{req.max_new_tokens} new tokens exceeds the slot "
-                f"horizon {self.max_len}")
+                f"horizon {horizon}")
 
     def admit(self, req: Request, slot: int | None = None) -> int:
         """Prefill one request and insert it into a free slot, in place."""

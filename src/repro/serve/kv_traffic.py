@@ -10,6 +10,11 @@ mode the paper's CloverLeaf WA study quantifies (arXiv:2311.04797) and
 exactly what the old ``jnp.pad`` regrow in launch/serve.py used to do
 every generation. The per-machine delta between the two is the serve
 path's WA story in bytes.
+
+:func:`decode_read_traffic` prices the *read* side of the same story:
+dense full-horizon KV streaming vs the split-KV kernel's
+occupancy-bounded blocks, per machine (each machine's autotuned KV
+block sets its rounding).
 """
 
 from __future__ import annotations
@@ -24,9 +29,43 @@ from repro.utils.hw import dtype_bytes
 _JAX_DTYPE = {"bfloat16": "bf16", "float32": "f32", "float16": "f16"}
 
 
-def _attn_layers(cfg: ModelConfig) -> int:
+def attn_layer_count(cfg: ModelConfig) -> int:
+    """Number of attention blocks (the layers that own a KV cache)."""
     return sum(blk.split(":")[0] in ("attn", "attn_local")
                for blk in cfg.layer_plan())
+
+
+def kv_row_bytes(cfg: ModelConfig, batch: int) -> float:
+    """Bytes one cache *row* (one token position) holds across the whole
+    stack: K and V, every attention layer, every slot."""
+    eb = dtype_bytes(_JAX_DTYPE.get(cfg.param_dtype, "f32"))
+    return 2.0 * attn_layer_count(cfg) * batch \
+        * cfg.n_kv_heads * cfg.head_dim_eff * eb
+
+
+def bounded_decode_plan(cfg: ModelConfig, batch: int, max_len: int,
+                        occupancy: int, machine) -> tuple:
+    """(TilePlan, bounded rows) of the split-KV kernel at an occupancy.
+
+    This is the single source of truth for what the kernel path
+    actually runs: the tiling is autotuned at the *streamed* length
+    (the occupancy bound — exactly what ``ops.flash_decode`` does with
+    its ``kv_len``), and the bound is then rounded up to that plan's
+    KV block. Reporters (:func:`decode_read_traffic`) and the planner
+    (``serve.planner._kernel_adjusted``) both price through here so
+    they can never describe a different plan than the kernel executes.
+    """
+    from repro.kernels import tuning
+
+    occupancy = max(1, min(int(occupancy), max_len))
+    plan = tuning.decode_tiles(
+        get_machine(machine).name, skv=occupancy, dh=cfg.head_dim_eff,
+        h=cfg.n_heads, hkv=cfg.n_kv_heads, batch=batch,
+        dtype=cfg.param_dtype)
+    bound = min(math.ceil(occupancy / plan.bk) * plan.bk, max_len)
+    return plan, bound
+
+
 
 
 def decode_kv_profiles(cfg: ModelConfig, batch: int,
@@ -39,7 +78,7 @@ def decode_kv_profiles(cfg: ModelConfig, batch: int,
     update would force. Returns the two StoreProfiles plus the total
     cache bytes (the working set gating SpecI2M saturation).
     """
-    n_attn = _attn_layers(cfg)
+    n_attn = attn_layer_count(cfg)
     hkv, dh = cfg.n_kv_heads, cfg.head_dim_eff
     dtype = _JAX_DTYPE.get(cfg.param_dtype, "f32")
     eb = dtype_bytes(dtype)
@@ -54,6 +93,41 @@ def decode_kv_profiles(cfg: ModelConfig, batch: int,
                              copy_bytes=cache_bytes)
     return {"donated": donated, "copied": copied,
             "cache_bytes": cache_bytes, "n_attn_layers": n_attn}
+
+
+def decode_read_traffic(cfg: ModelConfig, batch: int, max_len: int,
+                        occupancy: int, *, machines=None) -> list:
+    """Per-machine dense-vs-split-KV decode *read* traffic, per step.
+
+    The dense decode path streams every ``max_len`` cache row of every
+    attention layer for every slot on every token; the split-KV kernel's
+    block early-out streams only the occupied prefix, rounded up to the
+    machine's autotuned KV block (:func:`bounded_decode_plan` — so the
+    rounding itself is per-machine, and identical to what the executed
+    kernel path uses). Rows carry both byte counts and their ratio
+    (> 1 whenever the cache is not full): the serve-scale version of
+    the paper's never-move-bytes-you-don't-need WA lesson, in read
+    traffic instead of allocate traffic.
+    """
+    occupancy = max(1, min(int(occupancy), max_len))
+    row_bytes = kv_row_bytes(cfg, batch)
+    dense = row_bytes * max_len
+    rows = []
+    for name in (machines if machines is not None else registered_names()):
+        m = get_machine(name)
+        plan, bound = bounded_decode_plan(cfg, batch, max_len,
+                                          occupancy, m.name)
+        split = row_bytes * bound
+        rows.append({
+            "machine": m.name, "bk": plan.bk, "n_splits": plan.n_splits,
+            "occupancy": occupancy, "max_len": max_len,
+            "dense_read_bytes": dense, "split_read_bytes": split,
+            "read_ratio": dense / split,
+            "n_attn_layers": attn_layer_count(cfg),
+        })
+    if not all(math.isfinite(r["read_ratio"]) for r in rows):
+        raise AssertionError("non-finite KV read-traffic pricing")
+    return rows
 
 
 def kv_update_traffic(cfg: ModelConfig, batch: int, max_len: int, *,

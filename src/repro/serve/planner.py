@@ -7,6 +7,23 @@ analytical stack models: the decode step's compiled HLO is analyzed by
 the port model (``portmodel.compare``) and the chunk size is chosen so
 the modeled dispatch overhead stays below ``overhead_frac`` of the
 tier-resolved per-step cost (``Report.tier_bound_seconds``).
+
+Two things make planning cheap and occupancy-aware:
+
+* **Memoized planning** — lowering the decode step and fanning
+  ``portmodel.compare`` across the registry is orders of magnitude more
+  expensive than the arithmetic around it, and every engine
+  construction (and benchmark cell) replans. Both the HLO text and the
+  finished plans are cached on ``(cfg, batch, max_len, ..., registered
+  machine set)`` so repeat plans are O(1) dict hits.
+* **Kernel-path pricing** — the compiled HLO prices the *dense* decode
+  step: every slot reads the full ``max_len`` horizon. When the engine
+  routes attention through the split-KV kernel, the only term that
+  changes is the KV read traffic — bounded by occupancy rounded to the
+  machine's autotuned KV block, not by the horizon. ``plan_chunk_size``
+  re-prices that term through the memory ladder per machine
+  (:func:`kv_read_seconds`), so the chunk size tracks how full the
+  cache actually is.
 """
 
 from __future__ import annotations
@@ -18,40 +35,109 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import portmodel
+from repro.core import memtier, portmodel
 from repro.core.machine import get_machine, registered_names
 from repro.models import model as M
+
+#: (cfg, batch, max_len, n_tokens, temperature) -> compiled HLO text
+_HLO_CACHE: dict = {}
+#: full plan key (incl. registered machine set) -> ChunkPlan
+_PLAN_CACHE: dict = {}
 
 
 @dataclasses.dataclass(frozen=True)
 class ChunkPlan:
     """Planned decode chunk: size, the machine it was planned for, the
     tier-resolved per-step model cost there, and the per-machine costs of
-    every machine the module was compared on."""
+    every machine the module was compared on. When the plan priced the
+    split-KV kernel path, ``occupancy`` records the bound it assumed and
+    ``per_machine_dense`` keeps the unadjusted full-horizon costs."""
 
     chunk: int
     machine: str
     t_step_seconds: float
     per_machine: dict            # machine name -> tier-resolved step seconds
+    occupancy: int | None = None
+    per_machine_dense: dict | None = None
+
+
+def clear_plan_cache() -> None:
+    """Drop memoized HLO/plans (tests re-register machines)."""
+    _HLO_CACHE.clear()
+    _PLAN_CACHE.clear()
 
 
 def decode_step_hlo(cfg: ModelConfig, batch: int, max_len: int,
-                    n_tokens: int = 1, temperature: float = 0.0) -> str:
+                    n_tokens: int = 1, temperature: float = 0.0,
+                    attn_impl: str | None = None,
+                    kv_len: int | None = None) -> str:
     """Compiled HLO text of one n-token decode chunk at serve shapes.
 
     Lowered against abstract shapes only — no parameters or cache are
-    materialized.
+    materialized. Results are memoized on the full argument key (cfg is
+    a frozen dataclass, so identical configs share an entry).
     """
+    key = (cfg, batch, max_len, n_tokens, temperature, attn_impl, kv_len)
+    hit = _HLO_CACHE.get(key)
+    if hit is not None:
+        return hit
     from repro.serve.decode import make_chunked_decode_step
 
-    step = make_chunked_decode_step(cfg, n_tokens, temperature)
+    step = make_chunked_decode_step(cfg, n_tokens, temperature,
+                                    attn_impl=attn_impl, kv_len=kv_len)
     pshapes = M.param_shapes(cfg)
     cshapes = M.cache_shapes(cfg, batch, max_len)
     tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
     pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
-    return jax.jit(step, donate_argnums=(1,)).lower(
-        pshapes, cshapes, tok, pos, key).compile().as_text()
+    key_shape = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    text = jax.jit(step, donate_argnums=(1,)).lower(
+        pshapes, cshapes, tok, pos, key_shape).compile().as_text()
+    _HLO_CACHE[key] = text
+    return text
+
+
+def kv_read_seconds(cfg: ModelConfig, batch: int, kv_tokens: int,
+                    machine, *, max_len: int | None = None) -> float:
+    """Tier-resolved seconds one decode step spends streaming KV.
+
+    ``kv_tokens`` cache rows per slot, K and V, every attention layer —
+    the traffic term that distinguishes the dense path (``kv_tokens =
+    max_len``) from the split-KV kernel (``kv_tokens`` = occupancy
+    rounded to the machine's block). The working set is the allocated
+    cache (``max_len`` horizon), so the read resolves to the tier the
+    slot cache actually lives in on that machine.
+    """
+    from repro.serve.kv_traffic import kv_row_bytes
+    row = kv_row_bytes(cfg, batch)
+    ws = row * (max_len if max_len is not None else kv_tokens)
+    m = get_machine(machine)
+    return memtier.memory_seconds(m, row * kv_tokens, ws_bytes=ws,
+                                  store_frac=0.0,
+                                  cores_active=getattr(m, "cores", 1)
+                                  ).seconds
+
+
+def _kernel_adjusted(cfg: ModelConfig, batch: int, max_len: int,
+                     occupancy: int, per_machine: dict) -> dict:
+    """Re-price per-machine dense step costs for the split-KV kernel.
+
+    Swaps the full-horizon KV read for the occupancy-bounded one —
+    tiled and rounded exactly as the executed kernel path would be
+    (``kv_traffic.bounded_decode_plan``). The floor keeps the adjusted
+    cost from going below the bounded read itself when the port model
+    and the ladder disagree about the dense share.
+    """
+    from repro.serve.kv_traffic import bounded_decode_plan
+    out = {}
+    for name, t_dense in per_machine.items():
+        _, bound = bounded_decode_plan(cfg, batch, max_len, occupancy,
+                                       name)
+        dense_kv = kv_read_seconds(cfg, batch, max_len, name,
+                                   max_len=max_len)
+        split_kv = kv_read_seconds(cfg, batch, bound, name,
+                                   max_len=max_len)
+        out[name] = max(t_dense - dense_kv + split_kv, split_kv, 1e-12)
+    return out
 
 
 def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
@@ -59,7 +145,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                     dispatch_overhead_s: float = 2e-4,
                     overhead_frac: float = 0.1,
                     max_chunk: int = 32,
-                    hlo_text: str | None = None) -> ChunkPlan:
+                    hlo_text: str | None = None,
+                    occupancy: int | None = None) -> ChunkPlan:
     """Pick the decode chunk size from the port model's per-step cost.
 
     chunk = ceil(dispatch_overhead / (overhead_frac * t_step)) clamped to
@@ -68,22 +155,45 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     defaults to ``host_cpu`` when calibrated, else the first registered
     machine; the compare fan-out prices every registered machine and the
     full table is kept on the plan for reporting (benchmarks/fig6).
+
+    ``occupancy`` switches the plan to the split-KV kernel path: the
+    per-machine costs are re-priced with the KV read bounded by that
+    many rows (rounded to each machine's autotuned block), so a nearly
+    empty cache plans *larger* chunks than a full one. Plans (and the
+    lowered HLO) are memoized; passing an explicit ``hlo_text``
+    bypasses the plan cache.
     """
     if machine is None:
         names = registered_names()
         machine = "host_cpu" if "host_cpu" in names else names[0]
+    cache_key = None
     if hlo_text is None:
+        cache_key = (cfg, batch, max_len, machine, dispatch_overhead_s,
+                     overhead_frac, max_chunk, occupancy,
+                     registered_names())
+        hit = _PLAN_CACHE.get(cache_key)
+        if hit is not None:
+            return hit
         hlo_text = decode_step_hlo(cfg, batch, max_len, n_tokens=1)
     reports = portmodel.compare(hlo_text)
     per_machine = {name: rep.tier_bound_seconds(get_machine(name))
                    for name, rep in reports.items()}
-    t_step = per_machine.get(machine)
-    if t_step is None:
-        t_step = portmodel.analyze(hlo_text, machine).tier_bound_seconds(
-            get_machine(machine))
-        per_machine[get_machine(machine).name] = t_step
+    if per_machine.get(machine) is None:
+        per_machine[get_machine(machine).name] = portmodel.analyze(
+            hlo_text, machine).tier_bound_seconds(get_machine(machine))
+    per_machine_dense = None
+    if occupancy is not None:
+        per_machine_dense = dict(per_machine)
+        per_machine = _kernel_adjusted(cfg, batch, max_len, occupancy,
+                                       per_machine)
+    t_step = per_machine[get_machine(machine).name]
     chunk = 1 if t_step <= 0 else math.ceil(
         dispatch_overhead_s / (overhead_frac * t_step))
     chunk = max(1, min(max_chunk, chunk))
-    return ChunkPlan(chunk=chunk, machine=get_machine(machine).name,
-                     t_step_seconds=t_step, per_machine=per_machine)
+    plan = ChunkPlan(chunk=chunk, machine=get_machine(machine).name,
+                     t_step_seconds=t_step, per_machine=per_machine,
+                     occupancy=occupancy,
+                     per_machine_dense=per_machine_dense)
+    if cache_key is not None:
+        _PLAN_CACHE[cache_key] = plan
+    return plan
