@@ -1,9 +1,13 @@
-"""Paper Fig. 3: RPE histograms — our port/ECM model vs the naive
-cost_analysis baseline (the LLVM-MCA stand-in) over the validation suite.
+"""Paper Fig. 3: RPE histograms — both in-core prediction engines
+(analytical ``tp_bound`` port model and the ``mca_sched`` cycle
+simulator, the repro's OSACA-vs-LLVM-MCA comparison) vs the naive
+cost_analysis baseline over the validation suite.
 
 Default (quick): 13 kernels x 2 variants x 2 sizes = 52 blocks.
 --full: 13 x 8 x 4 = 416 blocks (the paper's count). Results are cached
-to results/rpe_records.json so reruns are incremental.
+to results/rpe_records.json so reruns are incremental; records written
+before the backend split lack the simulator prediction and are re-run
+once to backfill it.
 """
 
 from __future__ import annotations
@@ -16,17 +20,31 @@ from repro.core import rpe
 CACHE = "results/rpe_records.json"
 
 
+def _complete(r) -> bool:
+    """A cache entry counts as done only when fully populated: finite
+    measurement AND a finite simulator prediction (legacy pre-backend
+    records carry NaN ``t_mca`` and are re-run to backfill)."""
+    return math.isfinite(r.t_meas) and math.isfinite(r.t_mca)
+
+
 def run(full: bool = False, cache: str = CACHE):
+    """Run (or resume) the Fig. 3 grid; returns the record list."""
     variants = rpe.VARIANTS if full else ("jnp", "fori")
     sizes = tuple(rpe.SIZES) if full else ("S", "L")
     done = {}
+    keep = {}       # every finite measurement ever — what gets persisted
     if os.path.exists(cache):
-        # Only finite records count as done: failure sentinels (NaN /
+        # Only complete records count as done: failure sentinels (NaN /
         # null t_meas) are retried instead of pinning the cache to a
-        # bad environment forever.
+        # bad environment forever. Legacy records (finite t_meas, no
+        # t_mca) are re-run to backfill the simulator prediction but
+        # stay in `keep` so a failed backfill cannot delete a
+        # previously measured block from the cache.
         for r in rpe.load_records(cache):
             if math.isfinite(r.t_meas):
-                done[(r.kernel, r.variant, r.size)] = r
+                keep[(r.kernel, r.variant, r.size)] = r
+                if _complete(r):
+                    done[(r.kernel, r.variant, r.size)] = r
     records = []
     changed = False
     from repro.kernels.stream.ref import KERNELS_13
@@ -40,25 +58,32 @@ def run(full: bool = False, cache: str = CACHE):
                 try:
                     r = rpe.run_block(k, v, s)
                 except Exception:  # noqa: BLE001 — suite must finish
-                    r = rpe.RpeRecord(k, v, s, float("nan"),
-                                      float("nan"), float("nan"))
-                records.append(r)
-                if math.isfinite(r.t_meas):
+                    nan = float("nan")
+                    r = rpe.RpeRecord(k, v, s, nan, nan, nan)
+                if _complete(r):
+                    records.append(r)
                     done[kk] = r
+                    keep[kk] = r
                     changed = True
+                else:
+                    # failed (back)fill: fall back to the legacy record
+                    # if one exists — its finite measurement still
+                    # feeds the port/naive summaries
+                    records.append(keep.get(kk, r))
     if changed:
-        # Persist every successful block ever measured (done spans
+        # Persist every successful block ever measured (keep spans
         # quick and --full sweeps), never the failure sentinels.
-        rpe.save_records(sorted(done.values(), key=lambda r: (
+        rpe.save_records(sorted(keep.values(), key=lambda r: (
             r.kernel, r.variant, r.size)), cache)
     return records
 
 
 def main(quick: bool = True):
+    """Emit the fig3 CSV lines: per-backend summaries + histograms."""
     records = run(full=not quick)
     s = rpe.summarize(records)
     lines = []
-    for model in ("port_model", "naive_baseline"):
+    for model in ("port_model", "mca_sched", "naive_baseline"):
         st = s[model]
         if not st:          # every block failed — degrade, don't crash
             lines.append(f"fig3,{model},0,no_finite_records")
@@ -69,13 +94,12 @@ def main(quick: bool = True):
             f"within10={st['within10_pct']:.0f}%;"
             f"within20={st['within20_pct']:.0f}%;"
             f"factor2_off={st['factor2_off']};"
+            f"mean_rpe={st['mean_rpe']:.2f};"
             f"mean_underpred={st['mean_underpred_rpe']:.2f}")
-    h = rpe.histogram(records, "port")
-    lines.append("fig3,hist_port,0," +
-                 ";".join(f"{k}:{v}" for k, v in h.items()))
-    h2 = rpe.histogram(records, "naive")
-    lines.append("fig3,hist_naive,0," +
-                 ";".join(f"{k}:{v}" for k, v in h2.items()))
+    for which in ("port", "mca", "naive"):
+        h = rpe.histogram(records, which)
+        lines.append(f"fig3,hist_{which},0," +
+                     ";".join(f"{k}:{v}" for k, v in h.items()))
     return lines
 
 

@@ -67,7 +67,7 @@ def gen_fig3() -> str:
     recs = rpe.load_records(path)
     s = rpe.summarize(recs)
     out = []
-    for model in ("port_model", "naive_baseline"):
+    for model in ("port_model", "mca_sched", "naive_baseline"):
         st = s[model]
         if not st:
             out.append(f"- **{model}**: (no finite records)")

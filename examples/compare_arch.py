@@ -49,9 +49,14 @@ def workload_hlo(seq: int, d_model: int, n_layers: int) -> str:
 
 
 def compare_table(hlo: str, machines=DEFAULT_MACHINES,
-                  nt_stores: bool = False) -> list:
-    """[(name, report, wa-dict)] for one module across machines."""
-    reports = portmodel.compare(hlo, machines=machines)
+                  nt_stores: bool = False,
+                  backend: str = "tp_bound") -> list:
+    """[(name, report, wa-dict)] for one module across machines.
+
+    ``backend`` picks the scheduling engine (``tp``/``mca``); the trace
+    is lowered once regardless (core/trace.py).
+    """
+    reports = portmodel.compare(hlo, machines=machines, backends=backend)
     scan = wa.analyze_text_stores(hlo)     # machine-independent: once
     rows = []
     for name, rep in reports.items():
@@ -67,10 +72,13 @@ def main():
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--nt", action="store_true",
                     help="assume non-temporal stores")
+    ap.add_argument("--backend", default="tp",
+                    help="scheduling backend: tp (analytical bound) or "
+                         "mca (cycle simulator)")
     args = ap.parse_args()
 
     hlo = workload_hlo(args.seq, args.d_model, args.layers)
-    rows = compare_table(hlo, nt_stores=args.nt)
+    rows = compare_table(hlo, nt_stores=args.nt, backend=args.backend)
 
     hdr = (f"{'machine':<13} {'uarch':<22} {'clock':>6} {'bound cy':>12} "
            f"{'in-core cy':>12} {'t_bound':>9} {'t_tier':>9} "

@@ -1,0 +1,85 @@
+"""Regenerate the golden compare() regression fixture.
+
+Lowers a deterministic multi-feature workload (nested scans, fused
+update-in-place, slices, gather, divide, transcendentals, dots), saves
+the compiled HLO text to tests/data/golden.hlo, and captures the
+default-backend ``portmodel.compare`` output over the six built-in
+machines as tests/data/golden_compare.json.
+
+The digest format is shared with tests/test_golden_compare.py — run
+this script ONLY when an intentional model change invalidates the
+golden (and say so in the commit).
+
+Run:  PYTHONPATH=src:. python scripts/gen_golden_compare.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+
+from tests.test_golden_compare import GOLDEN_MACHINES, digest  # noqa: E402
+
+
+def golden_workload_hlo() -> str:
+    """A deterministic module exercising every analyzer path."""
+
+    def step(x, w1, w2, idx, cache):
+        def outer(carry, _):
+            c, i = carry
+
+            def inner(h, _):
+                return jnp.tanh(h @ w1) * 0.5 + h * 0.5, None
+
+            h, _ = jax.lax.scan(inner, c, None, length=3)
+            g = jax.nn.softmax(h, axis=-1) @ w2
+            g = g / (1.0 + jnp.exp(-h))          # divide + logistic
+            return (g + c, i + 1), None
+
+        (y, _), _ = jax.lax.scan(outer, (x, 0), None, length=5)
+        top = jnp.take(y, idx, axis=0)           # gather
+        sl = jax.lax.slice(y, (0, 0), (8, y.shape[1]))
+        cache = jax.lax.dynamic_update_slice(cache, y[None], (1, 0, 0))
+        return y, top.sum() + sl.sum(), cache
+
+    args = [
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((16,), jnp.int32),
+        jax.ShapeDtypeStruct((4, 64, 128), jnp.float32),
+    ]
+    return jax.jit(step).lower(*args).compile().as_text()
+
+
+def main():
+    from repro.core import portmodel
+
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    data = os.path.join(here, "tests", "data")
+    os.makedirs(data, exist_ok=True)
+    hlo_path = os.path.join(data, "golden.hlo")
+    json_path = os.path.join(data, "golden_compare.json")
+
+    if os.path.exists(hlo_path):
+        hlo = open(hlo_path).read()
+        print(f"reusing existing fixture {hlo_path}")
+    else:
+        hlo = golden_workload_hlo()
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        print(f"wrote {hlo_path} ({len(hlo)} bytes)")
+
+    reports = portmodel.compare(hlo, machines=GOLDEN_MACHINES,
+                                parallel="serial")
+    with open(json_path, "w") as f:
+        f.write(digest(reports))
+    print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

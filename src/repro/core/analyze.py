@@ -1,0 +1,111 @@
+"""Single-module analysis CLI over the prediction-engine frontend.
+
+Analyze one compiled HLO text file on any registered machines with any
+scheduling backends and print a per-(machine, backend) report table:
+
+    python -m repro.core.analyze step.hlo --machine zen4 --backend tp
+    python -m repro.core.analyze step.hlo --machine all \\
+        --backend tp,mca
+
+``--machine`` takes registered names (comma-separated and/or repeated)
+or ``all``; ``--backend`` takes backend names or aliases (``tp``,
+``mca``, ``osaca``, ``llvm-mca``, or the canonical ``tp_bound`` /
+``mca_sched``). The table reuses exactly the ``portmodel.compare``
+fan-out the serve planner and benchmarks consume.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import portmodel
+from repro.core.backends import get_backend, registered_backends
+from repro.core.machine import get_machine, registered_names
+
+
+def _split_multi(values, default: tuple, every: tuple) -> tuple:
+    """Flatten repeated/comma-separated option values.
+
+    No value -> ``default``; an explicit ``all`` -> ``every`` (the full
+    registry, which for backends is wider than the default).
+    """
+    if not values:
+        return default
+    out: list = []
+    for v in values:
+        out.extend(x.strip() for x in v.split(",") if x.strip())
+    if "all" in out:
+        return every
+    return tuple(dict.fromkeys(out))
+
+
+def format_table(reports: dict, backends: tuple) -> str:
+    """Render a nested ``{machine: {backend: Report}}`` as a table."""
+    hdr = (f"{'machine':<13} {'backend':<10} {'bound cy':>12} "
+           f"{'in-core cy':>12} {'sim cy':>12} {'t_bound':>10} "
+           f"{'t_tier':>10} {'bottleneck':>12} {'tier':>5} "
+           f"{'fallback':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for name, per in reports.items():
+        m = get_machine(name)
+        for bname in backends:
+            rep = per[bname]
+            sim = (f"{rep.sim_cycles:>12.3e}"
+                   if rep.sim_cycles is not None else f"{'-':>12}")
+            lines.append(
+                f"{name:<13} {bname:<10} {rep.bound_cycles:>12.3e} "
+                f"{rep.bound_incore_cycles:>12.3e} {sim} "
+                f"{rep.seconds(m)*1e6:>8.1f}us "
+                f"{rep.tier_bound_seconds(m)*1e6:>8.1f}us "
+                f"{rep.bottleneck():>12} "
+                f"{rep.bottleneck_tier or 'n/a':>5} "
+                f"{rep.fallback_uops:>8}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns a process exit status."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.analyze",
+        description="Analyze one compiled HLO module across machines "
+                    "and scheduling backends.")
+    ap.add_argument("hlo", help="path to a compiled HLO text file "
+                               "(jax: compiled.as_text())")
+    ap.add_argument("--machine", action="append", default=None,
+                    metavar="NAME[,NAME...]",
+                    help="registered machine name(s); repeatable; "
+                         "'all' (default) = every registered machine")
+    ap.add_argument("--backend", action="append", default=None,
+                    metavar="NAME[,NAME...]",
+                    help="scheduling backend(s): tp|mca or canonical "
+                         "names; repeatable (default: tp)")
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="device count for collective sizing")
+    args = ap.parse_args(argv)
+
+    machines = _split_multi(args.machine, registered_names(),
+                            registered_names())
+    backends = _split_multi(args.backend, ("tp_bound",),
+                            registered_backends())
+    # canonicalize aliases, then dedupe (tp + osaca are one backend)
+    backends = tuple(dict.fromkeys(get_backend(b).name
+                                   for b in backends))
+    for m in machines:
+        get_machine(m)          # fail fast with the registry's message
+    with open(args.hlo) as f:
+        hlo_text = f.read()
+
+    reports = portmodel.compare(hlo_text, machines=machines,
+                                n_devices=args.n_devices,
+                                backends=backends)
+    first = reports[next(iter(reports))][backends[0]]
+    print(f"module: {args.hlo}  (instrs={first.n_instrs}, "
+          f"unknown={first.unknown_ops}, "
+          f"backends={'/'.join(backends)}, "
+          f"registered backends={'/'.join(registered_backends())})")
+    print(format_table(reports, backends))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,19 +1,17 @@
-"""OSACA-semantics in-core analysis of compiled HLO: throughput (TP),
-critical path (CP), and loop-carried dependencies (LCD).
+"""Frontend of the in-core prediction engine.
 
-Reproduces the paper's three analyses on the TPU port model:
+The analysis stack is a pipeline (DESIGN.md §3):
 
- * TP  — every µ-op's port occupation is distributed evenly over its
-         admissible ports; the block lower bound is the maximum per-port
-         sum (perfect ILP assumption -> optimistic/lower bound).
- * CP  — longest latency path through the dataflow DAG.
- * LCD — for `while` loops (layer scans, decode loops, optimizer loops),
-         the body's carried-dependency path sets the per-iteration floor:
-         cycles(loop) = trips * max(TP_body, LCD_body).
+    hloparse -> trace.lower (machine-independent µ-op trace IR, once
+    per module) -> a scheduling backend per (machine, backend) pair
+    (core/backends/: analytical ``tp_bound``, simulated ``mca_sched``)
+    -> Report (core/report.py) -> resolve_tiers (memory ladder).
 
-The analyzer also re-accumulates FLOPs / HBM bytes / collective bytes with
-loop-trip multipliers — XLA's own cost_analysis visits while bodies once,
-which under-counts a scanned N-layer model by N x (see DESIGN.md §3.1).
+This module is the thin entry point everything downstream uses:
+``analyze`` (one machine, one backend), ``compare`` (fan one module's
+trace across machines x backends on a process pool), and
+``resolve_tiers`` (fill a report's memory-ladder fields). The heavy
+lifting lives in ``repro.core.trace`` and ``repro.core.backends``.
 """
 
 from __future__ import annotations
@@ -23,440 +21,16 @@ import functools
 import multiprocessing
 import os
 import pickle
-import re
 import warnings
-from collections import defaultdict
 from concurrent.futures import ProcessPoolExecutor
 
-from repro.core import isa
-from repro.core.hloparse import (Computation, HloModule, Instr,
-                                 parse_hlo, trip_counts_from_text,
-                                 while_trip_count)
-from repro.core.machine import (MachineModel, get_machine,
-                                registered_names)
-
-
-_MEM_PORTS = ("DMA", "ICI", "MEM")
-
-
-def _params_in_order(comp) -> list:
-    """Parameter instructions sorted by their declared parameter index
-    (HLO text lists them in dataflow order, not index order)."""
-    ps = [i for i in comp.instrs if i.opcode == "parameter"]
-
-    def key(i):
-        m = re.search(r"parameter_index=(\d+)", i.attrs)
-        return int(m.group(1)) if m else 1 << 30
-    return sorted(ps, key=key)
-
-
-def _is_mem_port(p: str) -> bool:
-    return p.startswith(_MEM_PORTS)
-
-
-@dataclasses.dataclass
-class Report:
-    """Result of analyzing one HLO module on one machine: TP/CP/LCD
-    cycles, per-port occupation, trip-multiplied traffic accounting,
-    and (once resolved) the memory-ladder fields."""
-
-    tp_cycles: float              # max per-port occupation (incl. DMA/ICI)
-    cp_cycles: float              # latency-critical path (in-core)
-    serial_cycles: float          # sum of sequential loop floors
-    port_occupation: dict         # port -> cycles
-    flops: float
-    bytes_hbm: float
-    coll_bytes: dict              # kind -> wire bytes
-    n_instrs: int
-    unknown_ops: int
-    trips_seen: dict              # loop name -> trips
-    loop_bytes: dict = dataclasses.field(default_factory=dict)
-    # loop name -> (trips, bytes/iter, flops/iter) for bottleneck attribution
-    # µ-ops whose class had no machine-file entry and were degraded to the
-    # cheapest available class (see Analyzer._occupy)
-    fallback_uops: int = 0
-    # memory-ladder resolution (filled by compare()/resolve_tiers — the
-    # analyzer itself is tier-agnostic): ECM memory term in seconds and
-    # the slowest / home tier of the module's traffic on this machine.
-    t_mem_tier: float | None = None
-    bottleneck_tier: str | None = None
-    home_tier: str | None = None
-
-    @property
-    def tp_incore_cycles(self) -> float:
-        """OSACA semantics: the in-core bound assumes operands resident
-        (L1 on CPU, VMEM on TPU) — memory/interconnect ports excluded."""
-        vals = [c for p, c in self.port_occupation.items()
-                if not _is_mem_port(p)]
-        return max(vals) if vals else 0.0
-
-    @property
-    def bound_cycles(self) -> float:
-        """ECM-style full bound: all ports + sequential loop floors."""
-        return max(self.tp_cycles, self.serial_cycles)
-
-    @property
-    def bound_incore_cycles(self) -> float:
-        """In-core bound: TP without memory ports vs the loop floors."""
-        return max(self.tp_incore_cycles, self.serial_cycles)
-
-    def seconds(self, machine: MachineModel) -> float:
-        """Full ECM-style bound (all ports + loop floors) in seconds."""
-        return self.bound_cycles / machine.clock_hz
-
-    def seconds_incore(self, machine: MachineModel) -> float:
-        """In-core bound (operands resident; no memory ports) in seconds."""
-        return self.bound_incore_cycles / machine.clock_hz
-
-    def tier_bound_seconds(self, machine: MachineModel) -> float:
-        """Tier-resolved bound: in-core time vs the memory-ladder term.
-
-        Falls back to the flat port-model bound when the tier fields
-        have not been resolved (see `resolve_tiers`).
-        """
-        if self.t_mem_tier is None:
-            return self.seconds(machine)
-        return max(self.seconds_incore(machine), self.t_mem_tier)
-
-    def bottleneck(self) -> str:
-        """Dominant limiter: the busiest port, or 'LCD(serial)' when
-        the sequential loop floors exceed every port."""
-        if not self.port_occupation:
-            return "none"
-        if self.serial_cycles > self.tp_cycles:
-            return "LCD(serial)"
-        return max(self.port_occupation, key=self.port_occupation.get)
-
-
-class Analyzer:
-    """Analyzes one HLO module against one machine model.
-
-    `machine` may be a MachineModel or the name of any registered machine
-    (see repro.core.machine.register).
-    """
-
-    def __init__(self, machine, n_devices: int = 1):
-        self.machine = get_machine(machine)
-        self.n_devices = n_devices
-        self._warned_classes: set = set()
-
-    # -- public ------------------------------------------------------------
-    def analyze_text(self, hlo_text: str) -> Report:
-        """Parse (memoized) and analyze one compiled HLO text."""
-        mod, trips = _parse_cached(hlo_text)
-        return self.analyze_module(mod, trips)
-
-    def analyze_module(self, mod: HloModule, trips: dict) -> Report:
-        """Analyze an already-parsed module with explicit trip counts."""
-        acc = _Acc()
-        self._comp(mod, mod.entry, trips, acc, mult=1.0)
-        tp = max(acc.ports.values()) if acc.ports else 0.0
-        return Report(
-            tp_cycles=tp, cp_cycles=acc.cp, serial_cycles=acc.serial,
-            port_occupation=dict(acc.ports), flops=acc.flops,
-            bytes_hbm=acc.bytes_hbm, coll_bytes=dict(acc.coll),
-            n_instrs=acc.n, unknown_ops=acc.unknown,
-            trips_seen=dict(acc.trips_seen),
-            loop_bytes=dict(acc.loop_bytes),
-            fallback_uops=acc.fallback)
-
-    # -- internals ----------------------------------------------------------
-    def _fallback_entry(self, cls: str):
-        """Entry for a µ-op class the machine file does not cover.
-
-        Prefers `vpu` (the historical fallback); a machine registered
-        without one (e.g. injected straight into the MACHINES dict,
-        bypassing validate_model) degrades to the cheapest available
-        non-memory class instead of raising KeyError. Warns once per
-        missing class per analyzer; occurrences are counted on the
-        report (`Report.fallback_uops`).
-        """
-        entry = self.machine.table.get("vpu")
-        if entry is None:
-            cands = {c: e for c, e in self.machine.table.items()
-                     if c not in ("dma", "ici")} or dict(self.machine.table)
-            if not cands:
-                raise KeyError(
-                    f"machine {self.machine.name!r} has an empty µ-op table")
-            entry = min(cands.values(), key=lambda e: e.cycles_per_unit)
-        if cls not in self._warned_classes:
-            self._warned_classes.add(cls)
-            warnings.warn(
-                f"machine {self.machine.name!r} has no entry for µ-op "
-                f"class {cls!r}; degrading to the cheapest available "
-                f"class (counted in Report.fallback_uops)",
-                RuntimeWarning, stacklevel=3)
-        return entry
-
-    def _occupy(self, acc, cls: str, units: float, mult: float):
-        entry = self.machine.table.get(cls)
-        if entry is None:
-            entry = self._fallback_entry(cls)
-            acc.fallback += 1
-        cyc = units * entry.cycles_per_unit * mult
-        if entry.port_weights is None:
-            share = cyc / len(entry.ports)
-            for p in entry.ports:
-                acc.ports[p] += share
-        else:
-            wsum = sum(entry.port_weights)
-            for p, w in zip(entry.ports, entry.port_weights):
-                acc.ports[p] += cyc * (w / wsum)
-        return cyc
-
-    _SLICE_LIKE = frozenset({"slice", "dynamic-slice", "gather"})
-    _FUSIBLE = frozenset({"fusion", "reduce", "broadcast", "transpose",
-                          "copy", "convert", "reshape", "bitcast"}) | \
-        isa.CHEAP_EW | isa.XLU_OPS | isa.DIV_OPS
-
-    def _internal_edges(self, comp) -> set:
-        """Values that XLA:TPU would keep in VMEM: produced by a fusible
-        op with ALL consumers fusible in the same computation. The CPU
-        backend (which we parse) fuses at different granularity; without
-        this projection scan-body elementwise chains are charged one HBM
-        round-trip per op. Diamonds (<=4 fusible consumers, e.g. the
-        online-softmax p -> {sum, dot}) fuse on TPU via producer
-        duplication, so they are internal too (DESIGN.md §7)."""
-        cons: dict = {}
-        for i in comp.instrs:
-            for o in i.operands:
-                cons.setdefault(o, []).append(i)
-        internal = set()
-        for i in comp.instrs:
-            if i.opcode not in self._FUSIBLE or i.is_root:
-                continue
-            if len(i.shapes) != 1:
-                continue
-            cs = cons.get(i.name, [])
-            if not cs or len(cs) > 4:
-                continue
-            # NOTE: a `dot` consumer does NOT make an edge internal — MXU
-            # operands are materialized (that is exactly what the Pallas
-            # flash kernel eliminates, see EXPERIMENTS.md §Perf).
-            if all(c.opcode in self._FUSIBLE for c in cs):
-                internal.add(i.name)
-        return internal
-
-    def _hbm_bytes(self, mod, instr: Instr, shapes_of,
-                   internal: set = frozenset()) -> float:
-        """HBM traffic of one op boundary, slice-aware: a (dynamic-)slice
-        or gather reads only the slice, not its (possibly scan-stacked)
-        operand; a dynamic-update-slice touches only the update region."""
-        op = instr.opcode
-        res = sum(s.bytes for s in instr.shapes)
-        if instr.name in internal:
-            res = 0.0           # stays in VMEM (fused into its consumer)
-        if op == "convert":
-            return 0.0          # native-bf16 projection (see fusion case)
-        if op in self._SLICE_LIKE:
-            return 2.0 * res
-        if op in ("dynamic-update-slice", "scatter"):
-            upd = shapes_of.get(instr.operands[1]) \
-                if len(instr.operands) > 1 else None
-            ub = upd.bytes if upd is not None else res
-            return 2.0 * ub
-
-        def op_bytes(opnd: str) -> float:
-            if opnd in internal:
-                return 0.0
-            s = shapes_of.get(opnd)
-            return float(s.bytes) if s is not None else 0.0
-
-        if op == "fusion":
-            body = mod.computations.get(instr.attr_comp("calls") or "")
-            total = float(res)
-            if body is None:
-                return total + sum(op_bytes(o) for o in instr.operands)
-            # fusion rooted in a dynamic-update-slice updates in place:
-            # traffic = the update region, not the full carried buffer
-            by_name = body.by_name()
-            root = body.root
-            for _ in range(4):      # unwrap trivial roots (incl. the
-                # XLA:CPU float-normalization converts, DESIGN.md §7)
-                if root.opcode in ("bitcast", "copy", "reshape",
-                                   "transpose", "convert") and root.operands:
-                    nxt = by_name.get(root.operands[0])
-                    if nxt is None:
-                        break
-                    root = nxt
-                else:
-                    break
-            # pure dtype-convert fusion: does not exist on native-bf16 TPUs
-            # (CPU backend upcasts bf16 ops to f32 and materializes copies)
-            if body.root.opcode == "convert" and root.opcode == "parameter":
-                return 0.0
-            dus_root = False
-            res_elems = sum(s.elems for s in instr.shapes)
-            if root.opcode == "dynamic-update-slice" and res > 0:
-                dus_root = True
-                b_shapes = {i.name: i.shape for i in body.instrs}
-                upd = b_shapes.get(root.operands[1]) \
-                    if len(root.operands) > 1 else None
-                if upd is not None:
-                    total = 2.0 * upd.bytes
-            params = _params_in_order(body)
-            for idx, opnd in enumerate(instr.operands):
-                if dus_root:
-                    # in-place update fusion: any operand with the target
-                    # buffer's element count is a (possibly dtype-
-                    # normalized) version of the buffer being updated —
-                    # physically only the update region is touched.
-                    s_op = shapes_of.get(opnd)
-                    if s_op is not None and s_op.elems == res_elems:
-                        continue
-                full = op_bytes(opnd)
-                pname = params[idx].name if idx < len(params) else None
-                if pname is None or full == 0.0:
-                    total += full
-                    continue
-                cons = [i for i in body.instrs if pname in i.operands]
-                if cons and all(c.opcode in self._SLICE_LIKE for c in cons):
-                    total += sum(sum(sh.bytes for sh in c.shapes)
-                                 for c in cons)
-                else:
-                    total += full
-            return total
-        return float(res) + sum(op_bytes(o) for o in instr.operands)
-
-    def _instr_cost(self, mod, instr: Instr, shapes_of, trips, acc,
-                    mult: float) -> float:
-        """Occupies ports; returns this instruction's own min-cycles
-        (used for CP/LCD edge weights)."""
-        op = instr.opcode
-        if op == "fusion":
-            body = mod.computations.get(instr.attr_comp("calls") or "")
-            own = 0.0
-            if body is not None:
-                own = self._comp(mod, body, trips, acc, mult,
-                                 hbm_boundary=False)
-            return own
-        if op in ("while",):
-            body = mod.computations.get(instr.attr_comp("body") or "")
-            n = while_trip_count(mod, instr, trips)
-            acc.trips_seen[instr.name] = n
-            if body is None:
-                return 0.0
-            sub = _Acc()
-            body_cp = self._comp(mod, body, trips, sub, 1.0)
-            body_tp = max((c for p, c in sub.ports.items()
-                           if not _is_mem_port(p)), default=0.0)
-            floor = n * max(body_tp, body_cp, sub.serial)
-            # merge: occupation scaled by trips
-            for p, c in sub.ports.items():
-                acc.ports[p] += c * n * mult
-            acc.flops += sub.flops * n * mult
-            acc.bytes_hbm += sub.bytes_hbm * n * mult
-            for k, v in sub.coll.items():
-                acc.coll[k] += v * n * mult
-            acc.n += sub.n
-            acc.unknown += sub.unknown
-            acc.fallback += sub.fallback
-            acc.serial += floor * mult
-            acc.trips_seen.update(sub.trips_seen)
-            acc.loop_bytes.update(sub.loop_bytes)
-            acc.loop_bytes[instr.name] = (n, sub.bytes_hbm, sub.flops)
-            return floor
-        if op in ("conditional", "call", "async-start"):
-            tgt = instr.attr_comp("calls") or instr.attr_comp("to_apply")
-            body = mod.computations.get(tgt or "")
-            if body is not None:
-                return self._comp(mod, body, trips, acc, mult,
-                                  hbm_boundary=False)
-            return 0.0
-
-        u = isa.decompose(instr, shapes_of, self.n_devices)
-        own = 0.0
-        for cls, units in u.uops:
-            cyc = self._occupy(acc, cls, units, mult) / mult
-            if cls not in ("dma", "ici"):
-                own += cyc      # CP/LCD chains are in-core (prefetchable
-                                # memory traffic is not a dependency)
-        acc.flops += u.flops * mult
-        if u.coll_bytes:
-            acc.coll[u.coll_kind] += u.coll_bytes * mult
-        acc.n += 1
-        acc.unknown += int(u.unknown)
-        return own
-
-    def _comp(self, mod, comp: Computation, trips, acc, mult: float,
-              hbm_boundary: bool = True) -> float:
-        """Analyze a computation; returns its CP length (cycles)."""
-        shapes_of = {i.name: i.shape for i in comp.instrs}
-        internal = self._internal_edges(comp) if hbm_boundary else frozenset()
-        # union cap: N slices of one source stream the source once
-        slice_budget: dict = {}
-        # carry double-buffer copies feeding only the root tuple are
-        # removed by XLA copy elision -> free
-        n_cons: dict = {}
-        for i in comp.instrs:
-            for o in i.operands:
-                n_cons[o] = n_cons.get(o, 0) + 1
-        root = comp.root
-        elided = {
-            i.name for i in comp.instrs
-            if i.opcode == "copy" and n_cons.get(i.name, 0) <= 1 and
-            root.opcode == "tuple" and i.name in root.operands}
-
-        depth: dict = {}
-        cp = 0.0
-        for instr in comp.instrs:
-            if instr.name in elided:     # alias-elided carry copy: free
-                d = max((depth.get(o, 0.0) for o in instr.operands),
-                        default=0.0)
-                depth[instr.name] = d
-                continue
-            own = self._instr_cost(mod, instr, shapes_of, trips, acc, mult)
-            lat = self._latency(instr, own)
-            d = lat + max((depth.get(o, 0.0) for o in instr.operands),
-                          default=0.0)
-            depth[instr.name] = d
-            cp = max(cp, d)
-            if hbm_boundary and instr.opcode != "while" and \
-                    instr.opcode not in isa.FREE_OPS:
-                b = self._hbm_bytes(mod, instr, shapes_of, internal)
-                if instr.opcode in self._SLICE_LIKE and instr.operands:
-                    src = instr.operands[0]
-                    s = shapes_of.get(src)
-                    if s is not None:
-                        left = slice_budget.setdefault(src, float(s.bytes))
-                        read = min(b / 2.0, left)
-                        slice_budget[src] = left - read
-                        b = read + b / 2.0        # capped read + write
-                acc.bytes_hbm += b * mult
-                self._occupy(acc, "dma", b, mult)
-        acc.cp = max(acc.cp, cp)
-        return cp
-
-    def _latency(self, instr: Instr, own_cycles: float) -> float:
-        if instr.opcode in ("while", "fusion"):
-            base = 0.0
-        else:
-            cls = ("mxu" if instr.opcode == "dot" else
-                   "xlu" if instr.opcode in isa.XLU_OPS else
-                   "vdiv" if instr.opcode in isa.DIV_OPS else "vpu")
-            entry = self.machine.table.get(cls)
-            if entry is None:
-                entry = self._fallback_entry(cls)
-            base = entry.latency
-        if instr.opcode in isa.FREE_OPS:
-            base = 0.0
-        # a consumer needing the full result also waits for throughput
-        return base + own_cycles
-
-
-class _Acc:
-    def __init__(self):
-        self.ports = defaultdict(float)
-        self.flops = 0.0
-        self.bytes_hbm = 0.0
-        self.coll = defaultdict(float)
-        self.n = 0
-        self.unknown = 0
-        self.fallback = 0
-        self.serial = 0.0
-        self.cp = 0.0
-        self.trips_seen = {}
-        self.loop_bytes = {}
+from repro.core import backends as backends_lib
+from repro.core import trace as trace_lib
+from repro.core.backends.mca_sched import McaSchedBackend
+from repro.core.backends.tp_bound import TpBoundBackend
+from repro.core.hloparse import parse_hlo, trip_counts_from_text
+from repro.core.machine import get_machine, registered_names
+from repro.core.report import Report  # noqa: F401  (public re-export)
 
 
 @functools.lru_cache(maxsize=4)
@@ -470,9 +44,48 @@ def _parse_cached(hlo_text: str) -> tuple:
     return parse_hlo(hlo_text), trip_counts_from_text(hlo_text)
 
 
-def analyze(hlo_text: str, machine, n_devices: int = 1) -> Report:
-    """Analyze one HLO text on one machine (name or MachineModel)."""
-    return Analyzer(machine, n_devices).analyze_text(hlo_text)
+@functools.lru_cache(maxsize=4)
+def _trace_cached(hlo_text: str, n_devices: int) -> trace_lib.Trace:
+    """Memoized lowered trace for one HLO text.
+
+    Decomposition (µ-ops, HBM byte math, loop structure) is machine-
+    independent, so one lowering serves every (machine, backend) pair
+    of a ``compare()`` fan-out — the old analyzer re-decomposed once
+    per machine."""
+    mod, trips = _parse_cached(hlo_text)
+    return trace_lib.lower(mod, trips, n_devices)
+
+
+class Analyzer:
+    """Analyzes HLO against one machine model with one backend.
+
+    Compatibility wrapper over the trace/backend pipeline: `machine`
+    may be a MachineModel or the name of any registered machine, and
+    `backend` any registered backend name or alias (``tp``/``mca``).
+    """
+
+    def __init__(self, machine, n_devices: int = 1,
+                 backend="tp_bound"):
+        self.machine = get_machine(machine)
+        self.n_devices = n_devices
+        self.backend = backends_lib.get_backend(backend)
+
+    def analyze_text(self, hlo_text: str) -> Report:
+        """Parse + lower (memoized) and analyze one compiled HLO text."""
+        return self.backend.run(_trace_cached(hlo_text, self.n_devices),
+                                self.machine)
+
+    def analyze_module(self, mod, trips: dict) -> Report:
+        """Analyze an already-parsed module with explicit trip counts."""
+        tr = trace_lib.lower(mod, trips, self.n_devices)
+        return self.backend.run(tr, self.machine)
+
+
+def analyze(hlo_text: str, machine, n_devices: int = 1,
+            backend="tp_bound") -> Report:
+    """Analyze one HLO text on one machine (name or MachineModel) with
+    one scheduling backend (name, alias, or Backend instance)."""
+    return Analyzer(machine, n_devices, backend).analyze_text(hlo_text)
 
 
 def resolve_tiers(report: Report, machine) -> Report:
@@ -506,64 +119,125 @@ def _pool_init(hlo_text: str) -> None:
     _WORKER_HLO = hlo_text
 
 
-def _compare_worker(model, n_devices: int) -> Report:
-    """One machine's analysis, run in a pool worker process.
+def _compare_worker(model, backend, n_devices: int) -> Report:
+    """One (machine, backend) analysis, run in a pool worker process.
 
-    With the (default on Linux) fork start method the parent's memoized
-    parse (`_parse_cached`) is inherited copy-on-write, so workers skip
-    re-parsing; under spawn they re-parse once per process — correct,
-    just slower.
+    ``backend`` is the Backend *instance* (pickled per task), so ad-hoc
+    instances with custom configuration run as-is — never swapped for
+    the registry's default. With the (default on Linux) fork start
+    method the parent's memoized trace (`_trace_cached`) is inherited
+    copy-on-write, so workers skip re-lowering; under spawn they lower
+    once per process — correct, just slower. Degradation warnings are
+    suppressed here and re-raised once by the parent (``compare``) from
+    the returned counts, so a missing µ-op class warns once per fan-out
+    instead of once per worker.
     """
-    rep = Analyzer(model, n_devices).analyze_text(_WORKER_HLO)
+    tr = _trace_cached(_WORKER_HLO, n_devices)
+    rep = backend.run(tr, model, warn=False)
     return resolve_tiers(rep, model)
 
 
+def _warn_degraded_once(tasks, reports) -> None:
+    """Single parent-side warning for µ-op-class degradation.
+
+    Workers (and the serial loop) analyze with warnings suppressed and
+    route occurrences through ``Report.fallback_uops`` /
+    ``fallback_classes``; this aggregates them so one fan-out warns
+    once, not once per (machine, backend, process)."""
+    degraded: dict = {}
+    total = 0
+    for (model, _bname), rep in zip(tasks, reports):
+        if rep.fallback_uops:
+            total += rep.fallback_uops
+            degraded.setdefault(model.name, set()).update(
+                rep.fallback_classes)
+    if not degraded:
+        return
+    detail = "; ".join(f"{m}: missing {sorted(cs)}"
+                       for m, cs in degraded.items())
+    warnings.warn(
+        f"{total} µ-ops degraded to fallback classes during compare() "
+        f"({detail}); counts are on Report.fallback_uops",
+        RuntimeWarning, stacklevel=3)
+
+
 def compare(hlo_text: str, machines=None, n_devices: int = 1,
-            max_workers: int | None = None, parallel: str = "auto") -> dict:
-    """Analyze one HLO module across several registered machines.
+            max_workers: int | None = None, parallel: str = "auto",
+            backends=None) -> dict:
+    """Analyze one HLO module across machines (and backends).
 
     `machines`: iterable of names and/or MachineModels; defaults to every
-    registered machine. The module is parsed once (memoized) and every
-    report comes back with its memory-ladder fields resolved
-    (`resolve_tiers`), so callers can read the tier-resolved bound
-    (`Report.tier_bound_seconds`) and bottleneck tier directly. Returns
-    {machine name: Report} preserving the requested order.
+    registered machine. The module is parsed and lowered to the µ-op
+    trace IR exactly once (memoized); every (machine, backend) pair
+    replays that trace, and every report comes back with its
+    memory-ladder fields resolved (`resolve_tiers`), so callers can
+    read the tier-resolved bound (`Report.tier_bound_seconds`) and
+    bottleneck tier directly.
+
+    `backends`: None or a single name keeps the legacy shape
+    ``{machine name: Report}`` (default backend: the analytical
+    ``tp_bound``). An iterable of names returns ``{machine name:
+    {backend name: Report}}`` — e.g. ``backends=("tp", "mca")`` for
+    the paper's OSACA-vs-MCA comparison. Order is preserved.
 
     The analyses are pure Python, so the fan-out runs on a **process**
-    pool (a thread pool would be GIL-bound — its own docstring used to
-    concede it bought almost nothing). `parallel`: "auto" (pool when the
-    estimated analysis work amortizes the fork/IPC overhead, fork is
-    available, and the models pickle), "serial" (in-process loop), or
-    "process" (force the pool). Ad-hoc unpicklable models and pool
-    failures degrade to the serial loop, so results never depend on the
-    execution mode.
+    pool. `parallel`: "auto" (pool when the estimated analysis work
+    amortizes the fork/IPC overhead, fork is available, and the models
+    pickle), "serial" (in-process loop), or "process" (force the pool).
+    Ad-hoc unpicklable models and pool failures degrade to the serial
+    loop, so results never depend on the execution mode. Missing µ-op
+    classes warn once here in the parent, not once per worker.
     """
     if machines is None:
         machines = registered_names()
     models = [get_machine(m) for m in machines]
-    mod, trips = _parse_cached(hlo_text)
+    flat = backends is None or isinstance(backends, str) or \
+        isinstance(backends, backends_lib.Backend)
+    bspecs = ["tp_bound"] if backends is None else \
+        ([backends] if flat else list(backends))
+    # resolve to instances (names/aliases via the registry, instances
+    # pass through untouched) and dedupe on the canonical name so
+    # alias + canonical spellings don't double the fan-out
+    bobjs, _seen = [], set()
+    for b in bspecs:
+        obj = backends_lib.get_backend(b)
+        if obj.name not in _seen:
+            _seen.add(obj.name)
+            bobjs.append(obj)
+    # the stock simulator runs the full analytical walk first and keeps
+    # its fields intact, so an mca_sched report *contains* the tp_bound
+    # one — when both stock engines are requested, run only the
+    # simulator tasks and derive the tp reports (half the walks on the
+    # documented OSACA-vs-MCA fan-out)
+    by_name = {b.name: b for b in bobjs}
+    derive_tp = (not flat and {"tp_bound", "mca_sched"} <= set(by_name)
+                 and type(by_name["tp_bound"]) is TpBoundBackend
+                 and isinstance(by_name["mca_sched"], McaSchedBackend))
+    run_objs = [b for b in bobjs if b.name != "tp_bound"] \
+        if derive_tp else bobjs
+    tasks = [(model, obj) for model in models for obj in run_objs]
+    tr = _trace_cached(hlo_text, n_devices)
 
     def run_serial():
         out = []
-        for model in models:
-            rep = Analyzer(model, n_devices).analyze_module(mod, trips)
+        for model, obj in tasks:
+            rep = obj.run(tr, model, warn=False)
             out.append(resolve_tiers(rep, model))
         return out
 
-    workers = min(max_workers or 8, len(models),
+    workers = min(max_workers or 8, len(tasks),
                   max(1, os.cpu_count() or 1))
     # ~17 µs/instr·machine analysis vs a few hundred ms of pool setup:
     # the pool only pays off when the serial fan-out is >~ 1 s of work
-    n_instr = sum(len(c.instrs) for c in mod.computations.values())
-    big_enough = n_instr * len(models) > 50_000
+    big_enough = tr.n_ops() * len(tasks) > 50_000
     use_pool = parallel == "process" or (
         parallel == "auto" and workers > 1 and big_enough
         and "fork" in multiprocessing.get_all_start_methods())
     if use_pool:
         try:
-            pickle.dumps(models)
+            pickle.dumps((models, bobjs))
         except Exception:
-            use_pool = False        # ad-hoc model: serial fallback
+            use_pool = False    # ad-hoc model/backend: serial fallback
     reports = None
     if use_pool:
         try:
@@ -577,12 +251,42 @@ def compare(hlo_text: str, machines=None, n_devices: int = 1,
                                          mp_context=ctx,
                                          initializer=_pool_init,
                                          initargs=(hlo_text,)) as ex:
-                    chunk = max(1, len(models) // workers)
+                    chunk = max(1, len(tasks) // workers)
                     reports = list(ex.map(
-                        _compare_worker, models,
-                        [n_devices] * len(models), chunksize=chunk))
+                        _compare_worker,
+                        [m for m, _ in tasks], [b for _, b in tasks],
+                        [n_devices] * len(tasks), chunksize=chunk))
         except Exception:
             reports = None          # broken pool: serial fallback
     if reports is None:
         reports = run_serial()
-    return {m.name: r for m, r in zip(models, reports)}
+    _warn_degraded_once(tasks, reports)
+    if flat:
+        return {m.name: r for (m, _), r in zip(tasks, reports)}
+    got = {(m.name, b.name): r for (m, b), r in zip(tasks, reports)}
+    out: dict = {m.name: {} for m in models}
+    for m in models:
+        for b in bobjs:             # preserve the requested order
+            if derive_tp and b.name == "tp_bound":
+                out[m.name][b.name] = _derive_tp_report(
+                    got[(m.name, "mca_sched")])
+            else:
+                out[m.name][b.name] = got[(m.name, b.name)]
+    return out
+
+
+def _derive_tp_report(mca_rep: Report) -> Report:
+    """The tp_bound Report contained in a stock mca_sched Report.
+
+    The simulator's analytic fields come from the same walk a tp_bound
+    run would do (pinned equal by tests/test_trace_backends.py);
+    clearing ``sim_cycles`` restores the analytical accessors. Dict
+    fields are copied so the two reports never share mutable state.
+    """
+    return dataclasses.replace(
+        mca_rep, backend="tp_bound", sim_cycles=None,
+        port_occupation=dict(mca_rep.port_occupation),
+        coll_bytes=dict(mca_rep.coll_bytes),
+        trips_seen=dict(mca_rep.trips_seen),
+        loop_bytes=dict(mca_rep.loop_bytes),
+        fallback_classes=tuple(mca_rep.fallback_classes))

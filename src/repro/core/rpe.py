@@ -178,7 +178,13 @@ def measure(fn, args, reps: int = 5, inner: int = 3,
 
 @dataclasses.dataclass
 class RpeRecord:
-    """One Fig. 3 data point: measured vs both predicted runtimes."""
+    """One Fig. 3 data point: measured vs per-backend predicted runtimes.
+
+    ``t_port`` is the analytical ``tp_bound`` backend (the OSACA side of
+    the paper's comparison), ``t_mca`` the ``mca_sched`` cycle simulator
+    (the LLVM-MCA side), ``t_naive`` the cost_analysis roofline baseline.
+    Records cached before the backend split lack ``t_mca`` and load as
+    NaN (the fig3 harness re-runs them)."""
 
     kernel: str
     variant: str
@@ -186,6 +192,7 @@ class RpeRecord:
     t_meas: float
     t_port: float
     t_naive: float
+    t_mca: float = float("nan")
 
     @property
     def rpe_port(self) -> float:
@@ -196,6 +203,11 @@ class RpeRecord:
     def rpe_naive(self) -> float:
         """Relative prediction error of the naive baseline (+ = under)."""
         return (self.t_meas - self.t_naive) / self.t_meas
+
+    @property
+    def rpe_mca(self) -> float:
+        """Relative prediction error of the MCA simulator (+ = under)."""
+        return (self.t_meas - self.t_mca) / self.t_meas
 
 
 def record_from_dict(d: dict) -> RpeRecord:
@@ -248,14 +260,24 @@ def run_block(kernel: str, variant: str, size: str) -> RpeRecord:
     lowered = fn.lower(*args)
     compiled = lowered.compile()
     t_meas = measure(fn, args, consumes_args=(variant == "donated"))
-    rep = portmodel.analyze(compiled.as_text(), machine)
+    text = compiled.as_text()
+    # one mca_sched report carries BOTH predictions: the simulator runs
+    # the analytic walk first and keeps its TP/LCD fields intact
+    # (pinned equal to a tp_bound run by tests/test_trace_backends.py),
+    # so fig3 pays one trace walk + one simulation per block, not two
+    # walks.
+    rep = portmodel.analyze(text, machine, backend="mca_sched")
     # ECM bound: in-core TP/LCD + memory term at the working set's tier
     ws = sum(4 * (a.size if hasattr(a, "size") else 1) for a in args) or 4 * n
     t_mem = rep.bytes_hbm / tier_bw(float(ws))
-    t_port = max(rep.seconds_incore(machine), t_mem)
+    t_incore_tp = max(rep.tp_incore_cycles,
+                      rep.serial_cycles) / machine.clock_hz
+    t_port = max(t_incore_tp, t_mem)
+    t_mca = max(rep.seconds_incore(machine), t_mem)
     ca = compiled.cost_analysis()   # predict() normalizes old-jax lists
     t_naive = baseline_lib.predict(ca, machine, peak, bw).seconds
-    return RpeRecord(kernel, variant, size, t_meas, t_port, t_naive)
+    return RpeRecord(kernel, variant, size, t_meas, t_port, t_naive,
+                     t_mca)
 
 
 def run_suite(kernels=None, variants=VARIANTS, sizes=tuple(SIZES),
@@ -277,7 +299,13 @@ def run_suite(kernels=None, variants=VARIANTS, sizes=tuple(SIZES),
 
 
 def summarize(records: list) -> dict:
-    """Fig. 3 summary stats per model (NaN-safe; see DESIGN.md §7)."""
+    """Fig. 3 summary stats per prediction engine (NaN-safe).
+
+    Keys: ``port_model`` (tp_bound backend), ``mca_sched`` (cycle
+    simulator backend), ``naive_baseline`` (cost_analysis roofline).
+    Non-finite RPEs (failed blocks, legacy caches without ``t_mca``)
+    are filtered per engine before any mean, so one NaN record cannot
+    poison a summary (see DESIGN.md §7)."""
     def stats(rpes):
         r = np.array([x for x in rpes if np.isfinite(x)])
         if r.size == 0:
@@ -289,20 +317,26 @@ def summarize(records: list) -> dict:
             "within20_pct": float(((r >= 0) & (r < 0.20)).mean() * 100),
             "abs_within10_pct": float((np.abs(r) < 0.10).mean() * 100),
             "factor2_off": int((r <= -1.0).sum()),
+            "mean_rpe": float(r.mean()),
             "mean_underpred_rpe": float(r[r >= 0].mean()) if (r >= 0).any()
             else float("nan"),
             "mean_abs_rpe": float(np.abs(r).mean()),
         }
     return {
         "port_model": stats([x.rpe_port for x in records]),
+        "mca_sched": stats([x.rpe_mca for x in records]),
         "naive_baseline": stats([x.rpe_naive for x in records]),
         "n_blocks": len(records),
     }
 
 
+_HIST_WHICH = {"port": "rpe_port", "mca": "rpe_mca", "naive": "rpe_naive"}
+
+
 def histogram(records: list, which: str = "port", width: float = 0.10):
-    """Bucketized RPE histogram (paper Fig. 3 bars)."""
-    vals = [getattr(r, f"rpe_{'port' if which == 'port' else 'naive'}")
+    """Bucketized RPE histogram (paper Fig. 3 bars) for one engine
+    (``port`` / ``mca`` / ``naive``)."""
+    vals = [getattr(r, _HIST_WHICH.get(which, "rpe_naive"))
             for r in records]
     vals = [v for v in vals if np.isfinite(v)]
     buckets: dict = {}

@@ -1,0 +1,335 @@
+"""Machine-independent µ-op trace IR.
+
+``lower()`` turns a parsed HLO module into a :class:`Trace`: a tree of
+:class:`TraceRegion`\\ s (the entry computation, inlined fusion/call
+bodies, and ``while`` loop bodies) whose :class:`TraceOp` records carry
+everything the scheduling backends need and nothing machine-specific:
+
+ * the µ-op decomposition (``isa.decompose``: class + unit counts),
+ * dependency edges (operand names, region-local),
+ * the latency *class* (the machine file supplies the actual cycles),
+ * boundary HBM traffic per op (slice-capped, fusion-projected — the
+   byte math of the old monolithic analyzer, verbatim),
+ * loop structure with resolved trip counts.
+
+Lowering runs **once per module**: a registry-wide fan-out used to
+re-parse and re-decompose the same HLO once per machine; now every
+``(machine, backend)`` pair replays one shared trace
+(`core/backends/`). The traversal order of ``lower`` deliberately
+mirrors the old ``Analyzer._comp`` recursion so the default TP-bound
+backend reproduces the pre-refactor reports bit-for-bit
+(tests/test_golden_compare.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core import isa
+from repro.core.hloparse import (Computation, HloModule, Instr,
+                                 parse_hlo, trip_counts_from_text,
+                                 while_trip_count)
+
+#: opcodes whose HBM traffic is the slice, not the sliced operand
+SLICE_LIKE = frozenset({"slice", "dynamic-slice", "gather"})
+#: ops XLA:TPU fuses into consumers (their edges can stay in VMEM)
+FUSIBLE = frozenset({"fusion", "reduce", "broadcast", "transpose",
+                     "copy", "convert", "reshape", "bitcast"}) | \
+    isa.CHEAP_EW | isa.XLU_OPS | isa.DIV_OPS
+
+
+def params_in_order(comp: Computation) -> list:
+    """Parameter instructions sorted by their declared parameter index
+    (HLO text lists them in dataflow order, not index order)."""
+    ps = [i for i in comp.instrs if i.opcode == "parameter"]
+
+    def key(i):
+        m = re.search(r"parameter_index=(\d+)", i.attrs)
+        return int(m.group(1)) if m else 1 << 30
+    return sorted(ps, key=key)
+
+
+@dataclasses.dataclass
+class TraceOp:
+    """One trace record: a decomposed instruction, an inlined call-like
+    region, a loop region, or an alias-elided carry copy."""
+
+    name: str
+    opcode: str
+    kind: str = "op"              # "op" | "inline" | "loop" | "elided"
+    uops: tuple = ()              # ((µ-op class, units), ...)
+    deps: tuple = ()              # operand names (region-local)
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_kind: str = ""
+    unknown: bool = False
+    free: bool = False            # FREE_OPS: zero latency base
+    lat_cls: str | None = None    # latency class (None: while/fusion)
+    # boundary HBM bytes (slice-capped); None when outside a boundary
+    # region or for while/free ops — backends must distinguish "no
+    # boundary here" from a genuine 0-byte boundary (fused edge)
+    dma_bytes: float | None = None
+    region: "TraceRegion | None" = None   # inline / loop body
+    trips: int = 1                # loop trip count
+    # inline only: body parameter name -> outer operand name, and the
+    # body root's name — lets a flattening backend (mca_sched) stitch
+    # dependency edges across the call boundary
+    param_map: dict | None = None
+    root_name: str | None = None
+
+
+@dataclasses.dataclass
+class TraceRegion:
+    """An ordered op list lowered from one computation visit.
+
+    ``boundary`` marks regions whose op results cross the HBM boundary
+    (the entry computation and ``while`` bodies); inlined fusion/call
+    bodies stay in VMEM and carry no per-op traffic.
+    """
+
+    name: str
+    boundary: bool
+    ops: list
+
+    def n_ops(self) -> int:
+        """Total op records in this region and every nested region."""
+        n = 0
+        for op in self.ops:
+            n += 1
+            if op.region is not None:
+                n += op.region.n_ops()
+        return n
+
+
+@dataclasses.dataclass
+class Trace:
+    """A lowered module: the entry region plus lowering metadata."""
+
+    module_name: str
+    entry: TraceRegion
+    n_devices: int = 1
+
+    def n_ops(self) -> int:
+        """Total op records across the whole trace."""
+        return self.entry.n_ops()
+
+
+def lower_text(hlo_text: str, n_devices: int = 1) -> Trace:
+    """Parse and lower one compiled HLO text."""
+    return lower(parse_hlo(hlo_text), trip_counts_from_text(hlo_text),
+                 n_devices)
+
+
+def lower(mod: HloModule, trips: dict, n_devices: int = 1) -> Trace:
+    """Lower a parsed module (with trip counts) into a Trace."""
+    entry = _lower_comp(mod, mod.entry, trips, n_devices, boundary=True)
+    return Trace(mod.name, entry, n_devices)
+
+
+def _internal_edges(comp: Computation) -> set:
+    """Values that XLA:TPU would keep in VMEM: produced by a fusible
+    op with ALL consumers fusible in the same computation. The CPU
+    backend (which we parse) fuses at different granularity; without
+    this projection scan-body elementwise chains are charged one HBM
+    round-trip per op. Diamonds (<=4 fusible consumers, e.g. the
+    online-softmax p -> {sum, dot}) fuse on TPU via producer
+    duplication, so they are internal too (DESIGN.md §7)."""
+    cons: dict = {}
+    for i in comp.instrs:
+        for o in i.operands:
+            cons.setdefault(o, []).append(i)
+    internal = set()
+    for i in comp.instrs:
+        if i.opcode not in FUSIBLE or i.is_root:
+            continue
+        if len(i.shapes) != 1:
+            continue
+        cs = cons.get(i.name, [])
+        if not cs or len(cs) > 4:
+            continue
+        # NOTE: a `dot` consumer does NOT make an edge internal — MXU
+        # operands are materialized (that is exactly what the Pallas
+        # flash kernel eliminates, see EXPERIMENTS.md §Perf).
+        if all(c.opcode in FUSIBLE for c in cs):
+            internal.add(i.name)
+    return internal
+
+
+def _hbm_bytes(mod, instr: Instr, shapes_of,
+               internal: set = frozenset()) -> float:
+    """HBM traffic of one op boundary, slice-aware: a (dynamic-)slice
+    or gather reads only the slice, not its (possibly scan-stacked)
+    operand; a dynamic-update-slice touches only the update region."""
+    op = instr.opcode
+    res = sum(s.bytes for s in instr.shapes)
+    if instr.name in internal:
+        res = 0.0           # stays in VMEM (fused into its consumer)
+    if op == "convert":
+        return 0.0          # native-bf16 projection (see fusion case)
+    if op in SLICE_LIKE:
+        return 2.0 * res
+    if op in ("dynamic-update-slice", "scatter"):
+        upd = shapes_of.get(instr.operands[1]) \
+            if len(instr.operands) > 1 else None
+        ub = upd.bytes if upd is not None else res
+        return 2.0 * ub
+
+    def op_bytes(opnd: str) -> float:
+        if opnd in internal:
+            return 0.0
+        s = shapes_of.get(opnd)
+        return float(s.bytes) if s is not None else 0.0
+
+    if op == "fusion":
+        body = mod.computations.get(instr.attr_comp("calls") or "")
+        total = float(res)
+        if body is None:
+            return total + sum(op_bytes(o) for o in instr.operands)
+        # fusion rooted in a dynamic-update-slice updates in place:
+        # traffic = the update region, not the full carried buffer
+        by_name = body.by_name()
+        root = body.root
+        for _ in range(4):      # unwrap trivial roots (incl. the
+            # XLA:CPU float-normalization converts, DESIGN.md §7)
+            if root.opcode in ("bitcast", "copy", "reshape",
+                               "transpose", "convert") and root.operands:
+                nxt = by_name.get(root.operands[0])
+                if nxt is None:
+                    break
+                root = nxt
+            else:
+                break
+        # pure dtype-convert fusion: does not exist on native-bf16 TPUs
+        # (CPU backend upcasts bf16 ops to f32 and materializes copies)
+        if body.root.opcode == "convert" and root.opcode == "parameter":
+            return 0.0
+        dus_root = False
+        res_elems = sum(s.elems for s in instr.shapes)
+        if root.opcode == "dynamic-update-slice" and res > 0:
+            dus_root = True
+            b_shapes = {i.name: i.shape for i in body.instrs}
+            upd = b_shapes.get(root.operands[1]) \
+                if len(root.operands) > 1 else None
+            if upd is not None:
+                total = 2.0 * upd.bytes
+        params = params_in_order(body)
+        for idx, opnd in enumerate(instr.operands):
+            if dus_root:
+                # in-place update fusion: any operand with the target
+                # buffer's element count is a (possibly dtype-
+                # normalized) version of the buffer being updated —
+                # physically only the update region is touched.
+                s_op = shapes_of.get(opnd)
+                if s_op is not None and s_op.elems == res_elems:
+                    continue
+            full = op_bytes(opnd)
+            pname = params[idx].name if idx < len(params) else None
+            if pname is None or full == 0.0:
+                total += full
+                continue
+            cons = [i for i in body.instrs if pname in i.operands]
+            if cons and all(c.opcode in SLICE_LIKE for c in cons):
+                total += sum(sum(sh.bytes for sh in c.shapes)
+                             for c in cons)
+            else:
+                total += full
+        return total
+    return float(res) + sum(op_bytes(o) for o in instr.operands)
+
+
+def _latency_class(instr: Instr) -> str | None:
+    """The machine-file class whose latency gates this op's consumers
+    (None for while/fusion, whose own body cost is the latency)."""
+    if instr.opcode in ("while", "fusion"):
+        return None
+    return ("mxu" if instr.opcode == "dot" else
+            "xlu" if instr.opcode in isa.XLU_OPS else
+            "vdiv" if instr.opcode in isa.DIV_OPS else "vpu")
+
+
+def _lower_comp(mod, comp: Computation, trips, n_devices: int,
+                boundary: bool) -> TraceRegion:
+    """Lower one computation visit, mirroring Analyzer._comp's order."""
+    shapes_of = {i.name: i.shape for i in comp.instrs}
+    internal = _internal_edges(comp) if boundary else frozenset()
+    # union cap: N slices of one source stream the source once
+    slice_budget: dict = {}
+    # carry double-buffer copies feeding only the root tuple are
+    # removed by XLA copy elision -> free
+    n_cons: dict = {}
+    for i in comp.instrs:
+        for o in i.operands:
+            n_cons[o] = n_cons.get(o, 0) + 1
+    root = comp.root
+    elided = {
+        i.name for i in comp.instrs
+        if i.opcode == "copy" and n_cons.get(i.name, 0) <= 1 and
+        root.opcode == "tuple" and i.name in root.operands}
+
+    ops: list = []
+    for instr in comp.instrs:
+        if instr.name in elided:     # alias-elided carry copy: free
+            ops.append(TraceOp(instr.name, instr.opcode, kind="elided",
+                               deps=tuple(instr.operands)))
+            continue
+        node = _lower_instr(mod, instr, shapes_of, trips, n_devices)
+        if boundary and instr.opcode != "while" and \
+                instr.opcode not in isa.FREE_OPS:
+            b = _hbm_bytes(mod, instr, shapes_of, internal)
+            if instr.opcode in SLICE_LIKE and instr.operands:
+                src = instr.operands[0]
+                s = shapes_of.get(src)
+                if s is not None:
+                    left = slice_budget.setdefault(src, float(s.bytes))
+                    read = min(b / 2.0, left)
+                    slice_budget[src] = left - read
+                    b = read + b / 2.0        # capped read + write
+            node.dma_bytes = b
+        ops.append(node)
+    return TraceRegion(comp.name, boundary, ops)
+
+
+def _lower_instr(mod, instr: Instr, shapes_of, trips,
+                 n_devices: int) -> TraceOp:
+    """Lower one non-elided instruction to its TraceOp."""
+    op = instr.opcode
+    base = dict(name=instr.name, opcode=op, deps=tuple(instr.operands),
+                free=op in isa.FREE_OPS, lat_cls=_latency_class(instr))
+    if op == "fusion":
+        body = mod.computations.get(instr.attr_comp("calls") or "")
+        return TraceOp(kind="inline", **base,
+                       **_inline_fields(mod, body, instr, trips,
+                                        n_devices))
+    if op == "while":
+        body = mod.computations.get(instr.attr_comp("body") or "")
+        n = while_trip_count(mod, instr, trips)
+        region = None
+        if body is not None:
+            region = _lower_comp(mod, body, trips, n_devices,
+                                 boundary=True)
+        return TraceOp(kind="loop", region=region, trips=n, **base)
+    if op in ("conditional", "call", "async-start"):
+        tgt = instr.attr_comp("calls") or instr.attr_comp("to_apply")
+        body = mod.computations.get(tgt or "")
+        return TraceOp(kind="inline", **base,
+                       **_inline_fields(mod, body, instr, trips,
+                                        n_devices))
+    u = isa.decompose(instr, shapes_of, n_devices)
+    return TraceOp(kind="op", uops=tuple(u.uops), flops=u.flops,
+                   coll_bytes=u.coll_bytes, coll_kind=u.coll_kind,
+                   unknown=u.unknown, **base)
+
+
+def _inline_fields(mod, body, instr: Instr, trips,
+                   n_devices: int) -> dict:
+    """Region + cross-boundary alias info for an inlined body."""
+    if body is None:
+        return dict(region=None, param_map=None, root_name=None)
+    region = _lower_comp(mod, body, trips, n_devices, boundary=False)
+    pmap = {}
+    for idx, p in enumerate(params_in_order(body)):
+        if idx < len(instr.operands):
+            pmap[p.name] = instr.operands[idx]
+    return dict(region=region, param_map=pmap,
+                root_name=body.root.name)

@@ -81,21 +81,37 @@ def default_machine() -> str:
     return "tpu_v5e"
 
 
-def _mxu_seconds(m, macs: float) -> float:
-    """Modeled matmul time of ``macs`` multiply-accumulates on a machine."""
+def _mxu_seconds(m, macs: float, backend: str | None = None) -> float:
+    """Modeled matmul time of ``macs`` multiply-accumulates on a machine.
+
+    ``backend=None`` keeps the historical closed-form balanced-port
+    arithmetic; naming a scheduling backend (core/backends) prices the
+    same µ-ops through it instead — ``tp_bound`` is numerically
+    identical, ``mca_sched`` adds its dispatch/latency pessimism.
+    """
     e = m.table.get("mxu")
     if e is None:
         return 0.0
     passes = macs / (128.0 ** 3)
+    if backend is not None:
+        from repro.core.backends import uops_seconds
+        return uops_seconds(m, [("mxu", passes)], backend)
     return m.seconds(passes * e.cycles_per_unit / max(1, len(e.ports)))
 
 
-def _vpu_seconds(m, elems: float, weight: float = 1.0) -> float:
-    """Modeled elementwise time of ``elems`` f32 lanes (softmax etc.)."""
+def _vpu_seconds(m, elems: float, weight: float = 1.0,
+                 backend: str | None = None) -> float:
+    """Modeled elementwise time of ``elems`` f32 lanes (softmax etc.).
+
+    ``backend`` as in :func:`_mxu_seconds`.
+    """
     e = m.table.get("vpu")
     if e is None:
         return 0.0
     blocks = elems / (8.0 * 128.0)
+    if backend is not None:
+        from repro.core.backends import uops_seconds
+        return uops_seconds(m, [("vpu", weight * blocks)], backend)
     return m.seconds(weight * blocks * e.cycles_per_unit
                      / max(1, len(e.ports)))
 
@@ -126,21 +142,25 @@ def _overlap_ok(tiers, home) -> bool:
 
 @lru_cache(maxsize=512)
 def flash_tiles(machine: str, *, s: int, dh: int, h: int, hkv: int,
-                dtype: str = "bf16") -> TilePlan:
+                dtype: str = "bf16",
+                backend: str | None = None) -> TilePlan:
     """Autotuned (bq, bk) for the prefill/training flash kernel.
 
     Prices the causal kernel at sequence length ``s`` per candidate:
     stream / resident / compute terms composed by the overlap rule
     (module docstring) over the causal half-grid. ``machine`` is a
-    registered name — plans are memoized on it.
+    registered name — plans are memoized on it. ``backend`` routes the
+    compute term through a scheduling backend (``tp_bound`` reproduces
+    the default closed form; ``mca_sched`` opts into simulator
+    pessimism); None keeps the historical arithmetic.
     """
     m = get_machine(machine)
     tiers = memtier.tiers_of(m)
     backing = tiers[-1]
     eb = dtype_bytes(dtype)
     # compute is tiling-invariant: total MACs of the causal half
-    t_cmp = _mxu_seconds(m, s * s * dh * h) \
-        + _vpu_seconds(m, s * s * h / 2.0, 3.0)
+    t_cmp = _mxu_seconds(m, s * s * dh * h, backend) \
+        + _vpu_seconds(m, s * s * h / 2.0, 3.0, backend)
     best = None
     for bq in FLASH_BQ_CANDIDATES:
         for bk in FLASH_BK_CANDIDATES:
@@ -170,7 +190,8 @@ def flash_tiles(machine: str, *, s: int, dh: int, h: int, hkv: int,
 
 @lru_cache(maxsize=512)
 def decode_tiles(machine: str, *, skv: int, dh: int, h: int, hkv: int,
-                 batch: int = 1, dtype: str = "bf16") -> TilePlan:
+                 batch: int = 1, dtype: str = "bf16",
+                 backend: str | None = None) -> TilePlan:
     """Autotuned (bk, n_splits) for the split-KV flash-decode kernel.
 
     The query tile is the packed (Hkv*G, Dh) head block — one token —
@@ -178,15 +199,16 @@ def decode_tiles(machine: str, *, skv: int, dh: int, h: int, hkv: int,
     trades per-block bookkeeping (favors big ``bk``) against score-row
     residency (favors small ``bk``) while ``n_splits`` buys concurrent
     cores against the shared backing-tier ceiling at the price of one
-    cross-split combine pass per split.
+    cross-split combine pass per split. ``backend`` as in
+    :func:`flash_tiles`.
     """
     m = get_machine(machine)
     tiers = memtier.tiers_of(m)
     backing = tiers[-1]
     eb = dtype_bytes(dtype)
     cores = max(1, getattr(m, "cores", 1))
-    t_cmp = _mxu_seconds(m, 2.0 * batch * h * skv * dh) \
-        + _vpu_seconds(m, batch * h * skv, 3.0)
+    t_cmp = _mxu_seconds(m, 2.0 * batch * h * skv * dh, backend) \
+        + _vpu_seconds(m, batch * h * skv, 3.0, backend)
     best = None
     for bk in DECODE_BK_CANDIDATES:
         cbk = min(bk, max(1, skv))
@@ -204,7 +226,8 @@ def decode_tiles(machine: str, *, skv: int, dh: int, h: int, hkv: int,
             t_stream = kv_total / _tier_bw(backing, lanes)
             # splits run concurrently; the combine reads every split's
             # partial accumulator back once
-            combine = _vpu_seconds(m, n_splits * batch * h * dh, 2.0)
+            combine = _vpu_seconds(m, n_splits * batch * h * dh, 2.0,
+                                   backend)
             par = min(n_splits, cores)
             if _overlap_ok(tiers, home):
                 total = max(t_stream, t_res / par, t_cmp / par) + combine

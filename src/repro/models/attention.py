@@ -35,13 +35,14 @@ def dense_causal_attention(q, k, v, *, window: int | None = None,
     """Exact, materializes (Sq, Skv) scores. Use for small S / tests.
 
     q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh). Queries are at absolute
-    positions q_offset..q_offset+Sq-1; keys at 0..Skv-1. Returns (B, Sq, H, Dh).
+    positions q_offset..q_offset+Sq-1; keys at 0..Skv-1. Returns
+    (B, Sq, H, Dh).
     """
     b, sq, h, dh = q.shape
     hkv = k.shape[2]
     g = h // hkv
     qg = q.reshape(b, sq, hkv, g, dh) * (1.0 / math.sqrt(dh))
-    s = _gqa_scores(qg, k)                                    # (B,Hkv,G,Sq,Skv)
+    s = _gqa_scores(qg, k)                               # (B,Hkv,G,Sq,Skv)
     qpos = q_offset + jnp.arange(sq)[:, None]
     kpos = jnp.arange(k.shape[1])[None, :]
     mask = kpos <= qpos
@@ -116,7 +117,8 @@ def chunked_causal_attention(q, k, v, *, q_chunk: int = 512,
             p = jnp.exp(st - m_new[..., None])
             l_new = l * alpha + p.sum(axis=-1)
             acc_new = acc * alpha[..., None] + jnp.einsum(
-                "bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj).astype(jnp.float32)
+                "bhgqk,bkhd->bhgqd",
+                p.astype(vj.dtype), vj).astype(jnp.float32)
             return (m_new, l_new, acc_new), None
 
         m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)

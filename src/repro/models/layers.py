@@ -17,6 +17,7 @@ def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
 
 
 def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """SwiGLU gate: silu(gate) * up."""
     return jax.nn.silu(gate) * up
 
 
@@ -54,12 +55,14 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """
     half = x.shape[-1] // 2
     freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
-    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
-    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, half)
+    # angles: (..., S, half); cos/sin: (..., S, 1, half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., None, :]
     sin = jnp.sin(angles)[..., None, :]
     x1, x2 = x[..., :half], x[..., half:]
     x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
-    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1)
     return out.astype(x.dtype)
 
 
@@ -92,7 +95,8 @@ def apply_mrope(x: jax.Array, positions_3d: jax.Array, theta: float,
     sin = jnp.sin(angles)[..., None, :]
     x1, x2 = x[..., :half], x[..., half:]
     x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
-    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1)
     return out.astype(x.dtype)
 
 
@@ -100,6 +104,7 @@ def sinusoidal_embedding(positions: jax.Array, dim: int,
                          max_period: float = 10000.0) -> jax.Array:
     """Absolute sinusoidal position embedding (musicgen-family backbone)."""
     half = dim // 2
-    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    freqs = jnp.exp(-jnp.log(max_period)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
     angles = positions[..., None].astype(jnp.float32) * freqs
     return jnp.concatenate([jnp.cos(angles), jnp.sin(angles)], axis=-1)

@@ -27,6 +27,8 @@ from repro.utils.sharding import sc, spec_for
 
 @dataclasses.dataclass(frozen=True)
 class ParamDef:
+    """One parameter leaf: shape, sharding axis names, and initializer."""
+
     shape: tuple
     axes: tuple
     init: str = "normal"     # normal|zeros|ones|embed|alog|dtbias
@@ -133,6 +135,7 @@ _MIXER_DEFS = {
 
 
 def block_defs(cfg: ModelConfig, blk: str) -> dict:
+    """ParamDef tree of one layer block (``mixer:ffn`` plan entry)."""
     mixer, ffn = blk.split(":")
     p = {"ln1": ParamDef((cfg.d_model,), (None,), "ones"),
          "mixer": _MIXER_DEFS[mixer](cfg)}
@@ -143,6 +146,7 @@ def block_defs(cfg: ModelConfig, blk: str) -> dict:
 
 
 def model_defs(cfg: ModelConfig) -> dict:
+    """Whole-model ParamDef tree (embeddings, scan stack, tail, head)."""
     plan = cfg.layer_plan()
     n_rep, unit, n_tail = cfg.scan_split()
     defs = {}
@@ -229,6 +233,7 @@ def param_shapes(cfg: ModelConfig) -> dict:
 
 
 def param_pspecs(cfg: ModelConfig, rules: dict, mesh_sizes: dict) -> dict:
+    """PartitionSpec tree matching :func:`model_defs` under ``rules``."""
     defs = model_defs(cfg)
     n_rep, _, _ = cfg.scan_split()
 
@@ -277,21 +282,27 @@ def _cache_defs(cfg: ModelConfig, blk: str, batch: int, seq: int) -> dict:
     if mixer in ("attn", "attn_local"):
         # full-length cache also for local layers (window masked at use)
         return {
-            "k": ParamDef((batch, seq, hkv, dh), ("batch", "kv_seq", "kvheads", None), "zeros"),
-            "v": ParamDef((batch, seq, hkv, dh), ("batch", "kv_seq", "kvheads", None), "zeros"),
+            "k": ParamDef((batch, seq, hkv, dh),
+                          ("batch", "kv_seq", "kvheads", None), "zeros"),
+            "v": ParamDef((batch, seq, hkv, dh),
+                          ("batch", "kv_seq", "kvheads", None), "zeros"),
         }
     if mixer == "mamba":
         di, n, k = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_conv_dim
         return {
-            "h": ParamDef((batch, di, n), ("batch", "ssm_inner", None), "zeros"),
-            "conv": ParamDef((batch, k - 1, di), ("batch", None, "ssm_inner"), "zeros"),
+            "h": ParamDef((batch, di, n),
+                          ("batch", "ssm_inner", None), "zeros"),
+            "conv": ParamDef((batch, k - 1, di),
+                             ("batch", None, "ssm_inner"), "zeros"),
         }
     if mixer == "mlstm":
         di = cfg.xlstm_d_inner
         dh_i = di // h
         return {
-            "c": ParamDef((batch, h, dh_i, dh_i), ("batch", "qheads", None, None), "zeros"),
-            "n": ParamDef((batch, h, dh_i), ("batch", "qheads", None), "zeros"),
+            "c": ParamDef((batch, h, dh_i, dh_i),
+                          ("batch", "qheads", None, None), "zeros"),
+            "n": ParamDef((batch, h, dh_i),
+                          ("batch", "qheads", None), "zeros"),
             "m": ParamDef((batch, h), ("batch", "qheads"), "zeros"),
         }
     if mixer == "slstm":
@@ -306,6 +317,7 @@ def _cache_defs(cfg: ModelConfig, blk: str, batch: int, seq: int) -> dict:
 
 
 def cache_defs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Decode-cache ParamDef tree (KV / SSM / xLSTM state per block)."""
     plan = cfg.layer_plan()
     n_rep, unit, n_tail = cfg.scan_split()
     out = {}
@@ -319,11 +331,13 @@ def cache_defs(cfg: ModelConfig, batch: int, seq: int) -> dict:
 
 def _cache_leaf_dtype(cfg, d: ParamDef):
     # recurrent states fp32; KV cache in param dtype
-    return jnp.dtype(cfg.param_dtype) if len(d.shape) == 4 and d.axes[1] == "kv_seq" \
-        else (jnp.dtype(cfg.param_dtype) if d.axes[1] == "kv_seq" else jnp.float32)
+    if d.axes[1] == "kv_seq":
+        return jnp.dtype(cfg.param_dtype)
+    return jnp.float32
 
 
 def cache_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct tree of the decode cache at serve shapes."""
     defs = cache_defs(cfg, batch, seq)
     n_rep, _, _ = cfg.scan_split()
 
@@ -337,12 +351,14 @@ def cache_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
 
 
 def init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Zero-filled decode cache matching :func:`cache_shapes`."""
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                         cache_shapes(cfg, batch, seq))
 
 
 def cache_pspecs(cfg: ModelConfig, rules: dict, mesh_sizes: dict,
                  batch: int, seq: int) -> dict:
+    """PartitionSpec tree matching :func:`cache_defs` under ``rules``."""
     defs = cache_defs(cfg, batch, seq)
     n_rep, _, _ = cfg.scan_split()
 
@@ -390,8 +406,10 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
     new_cache = None
     if mode == "decode":
         if jnp.ndim(pos) == 0:
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
         else:
             # per-slot positions (continuous batching): each batch row
             # writes its own cache row in place
@@ -456,16 +474,20 @@ def apply_block(cfg: ModelConfig, blk: str, p: dict, x, *, mode: str,
     mixer, ffn = blk.split(":")
     hx = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     if mixer in ("attn", "attn_local"):
-        y, new_cache = _attn_mixer(cfg, p["mixer"], hx, local=(mixer == "attn_local"),
+        y, new_cache = _attn_mixer(cfg, p["mixer"], hx,
+                                   local=(mixer == "attn_local"),
                                    mode=mode, positions=positions,
                                    cache=cache, pos=pos, cache_len=cache_len,
                                    attn_impl=attn_impl, kv_len=kv_len)
     elif mixer == "mamba":
-        y, new_cache = _mamba_mixer(cfg, p["mixer"], hx, mode=mode, cache=cache)
+        y, new_cache = _mamba_mixer(cfg, p["mixer"], hx, mode=mode,
+                                    cache=cache)
     elif mixer == "mlstm":
-        y, new_cache = _mlstm_mixer(cfg, p["mixer"], hx, mode=mode, cache=cache)
+        y, new_cache = _mlstm_mixer(cfg, p["mixer"], hx, mode=mode,
+                                    cache=cache)
     elif mixer == "slstm":
-        y, new_cache = _slstm_mixer(cfg, p["mixer"], hx, mode=mode, cache=cache)
+        y, new_cache = _slstm_mixer(cfg, p["mixer"], hx, mode=mode,
+                                    cache=cache)
     else:
         raise ValueError(mixer)
     x = x + y
@@ -495,7 +517,8 @@ def _remat_wrap(cfg, fn):
     return jax.checkpoint(fn)  # "full": save nothing
 
 
-def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            mode: str = "train",
             cache: dict | None = None, pos=None, cache_len: int | None = None,
             attn_impl: str | None = None, kv_len: int | None = None):
     """Run the model.
@@ -531,10 +554,12 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
         p1 = jnp.asarray(pos)
         base = jnp.broadcast_to(p1[:, None] if p1.ndim else p1,
                                 (b, 1)).astype(jnp.int32)
-        positions = jnp.broadcast_to(base, (3, b, 1)) if cfg.rope_kind == "mrope" else base
+        positions = jnp.broadcast_to(base, (3, b, 1)) \
+            if cfg.rope_kind == "mrope" else base
     else:
         base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
-        positions = jnp.broadcast_to(base, (3, b, s)) if cfg.rope_kind == "mrope" else base
+        positions = jnp.broadcast_to(base, (3, b, s)) \
+            if cfg.rope_kind == "mrope" else base
 
     if cfg.rope_kind == "sinusoidal":
         pe = L.sinusoidal_embedding(
@@ -597,7 +622,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str = "train",
 
     for i in range(n_tail):
         blk = plan[n_rep * unit + i]
-        ci = cache["tail"][str(i)] if (cache is not None and mode == "decode") else None
+        ci = cache["tail"][str(i)] \
+            if (cache is not None and mode == "decode") else None
         x, a, nc = apply_block(cfg, blk, params["tail"][str(i)], x,
                                mode=mode, positions=positions,
                                cache=ci, pos=pos, cache_len=cache_len,

@@ -47,7 +47,7 @@ def moe_ffn(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
     if renormalize:
         top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
-    # --- Aux load-balance loss (Switch): E * mean(frac_tokens * frac_probs) ---
+    # --- Aux load-balance loss (Switch): E*mean(frac_tok * frac_prob) ---
     sel_onehot = jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32)
     frac_tokens = sel_onehot.mean(axis=(0, 1))
     frac_probs = probs.mean(axis=(0, 1))
@@ -58,19 +58,19 @@ def moe_ffn(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
     slot_e = top_e.reshape(g, sg * top_k)            # (G, SgK)
     slot_oh = jax.nn.one_hot(slot_e, e, dtype=jnp.int32)
     pos_in_e = jnp.cumsum(slot_oh, axis=1) * slot_oh - 1  # (G, SgK, E)
-    pos = pos_in_e.max(axis=-1)                      # (G, SgK) position in queue
+    pos = pos_in_e.max(axis=-1)                 # (G, SgK) queue position
     keep = pos < cap
     pos = jnp.where(keep, pos, 0)
 
-    # One-hot dispatch/combine tensors, (G, Sg, K, E, C) folded to (G, Sg, E, C).
+    # One-hot dispatch/combine: (G, Sg, K, E, C) folded to (G, Sg, E, C)
     oh_e = jax.nn.one_hot(slot_e, e, dtype=xg.dtype)            # (G, SgK, E)
     oh_c = jax.nn.one_hot(pos, cap, dtype=xg.dtype)             # (G, SgK, C)
     oh_c = oh_c * keep[..., None].astype(xg.dtype)
-    disp_k = jnp.einsum("gte,gtc->gtec", oh_e, oh_c)            # (G, SgK, E, C)
+    disp_k = jnp.einsum("gte,gtc->gtec", oh_e, oh_c)    # (G, SgK, E, C)
     disp_k = disp_k.reshape(g, sg, top_k, e, cap)
-    dispatch = disp_k.sum(axis=2)                                # (G, Sg, E, C)
+    dispatch = disp_k.sum(axis=2)                        # (G, Sg, E, C)
     combine = jnp.einsum("gskec,gsk->gsec", disp_k,
-                         top_p.astype(xg.dtype))                 # (G, Sg, E, C)
+                         top_p.astype(xg.dtype))         # (G, Sg, E, C)
 
     # --- Expert computation (E sharded over "model") ---
     xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)              # (G, E, C, d)

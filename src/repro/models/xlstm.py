@@ -106,7 +106,7 @@ def mlstm_chunkwise(p: dict, x: jax.Array, *, n_heads: int, chunk: int = 64,
 
         # chunk-end state
         f_last = f_cum[:, -1]                             # (B,H)
-        g = f_last[:, None, :] - f_cum + li_c             # (B,L,H) decay to end
+        g = f_last[:, None, :] - f_cum + li_c        # (B,L,H) decay to end
         m_new = jnp.maximum(f_last + m0, g.max(axis=1))
         w_old = jnp.exp(f_last + m0 - m_new)
         w_in = jnp.exp(g - m_new[:, None, :])             # (B,L,H)

@@ -59,6 +59,8 @@ class ChunkPlan:
     per_machine: dict            # machine name -> tier-resolved step seconds
     occupancy: int | None = None
     per_machine_dense: dict | None = None
+    # which scheduling backend priced the step (core/backends)
+    backend: str = "tp_bound"
 
 
 def clear_plan_cache() -> None:
@@ -146,7 +148,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                     overhead_frac: float = 0.1,
                     max_chunk: int = 32,
                     hlo_text: str | None = None,
-                    occupancy: int | None = None) -> ChunkPlan:
+                    occupancy: int | None = None,
+                    backend: str = "tp_bound") -> ChunkPlan:
     """Pick the decode chunk size from the port model's per-step cost.
 
     chunk = ceil(dispatch_overhead / (overhead_frac * t_step)) clamped to
@@ -159,28 +162,35 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     ``occupancy`` switches the plan to the split-KV kernel path: the
     per-machine costs are re-priced with the KV read bounded by that
     many rows (rounded to each machine's autotuned block), so a nearly
-    empty cache plans *larger* chunks than a full one. Plans (and the
-    lowered HLO) are memoized; passing an explicit ``hlo_text``
-    bypasses the plan cache.
+    empty cache plans *larger* chunks than a full one. ``backend``
+    picks the scheduling backend that prices the step (core/backends):
+    the default analytical ``tp_bound`` keeps plans identical to the
+    pre-backend-split planner; ``mca_sched`` plans against the
+    simulator's pessimistic-or-equal step cost (never a larger chunk
+    than the default). Plans (and the lowered HLO) are memoized;
+    passing an explicit ``hlo_text`` bypasses the plan cache.
     """
+    from repro.core.backends import get_backend
+    backend = get_backend(backend).name     # canonical (aliases fold)
     if machine is None:
         names = registered_names()
         machine = "host_cpu" if "host_cpu" in names else names[0]
     cache_key = None
     if hlo_text is None:
         cache_key = (cfg, batch, max_len, machine, dispatch_overhead_s,
-                     overhead_frac, max_chunk, occupancy,
+                     overhead_frac, max_chunk, occupancy, backend,
                      registered_names())
         hit = _PLAN_CACHE.get(cache_key)
         if hit is not None:
             return hit
         hlo_text = decode_step_hlo(cfg, batch, max_len, n_tokens=1)
-    reports = portmodel.compare(hlo_text)
+    reports = portmodel.compare(hlo_text, backends=backend)
     per_machine = {name: rep.tier_bound_seconds(get_machine(name))
                    for name, rep in reports.items()}
     if per_machine.get(machine) is None:
         per_machine[get_machine(machine).name] = portmodel.analyze(
-            hlo_text, machine).tier_bound_seconds(get_machine(machine))
+            hlo_text, machine,
+            backend=backend).tier_bound_seconds(get_machine(machine))
     per_machine_dense = None
     if occupancy is not None:
         per_machine_dense = dict(per_machine)
@@ -193,7 +203,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     plan = ChunkPlan(chunk=chunk, machine=get_machine(machine).name,
                      t_step_seconds=t_step, per_machine=per_machine,
                      occupancy=occupancy,
-                     per_machine_dense=per_machine_dense)
+                     per_machine_dense=per_machine_dense,
+                     backend=backend)
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = plan
     return plan

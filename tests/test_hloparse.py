@@ -1,0 +1,165 @@
+"""hloparse edge cases: out-of-order parameter_index ordering, nested
+while trip-count resolution (backend_config annotation, condition
+fallback, and the vocab-constant cap), and tuple-shape byte accounting
+through the parser and the trace lowering."""
+
+import math
+
+from repro.core import hloparse, portmodel, trace
+from repro.core.machine import TPU_V5E
+
+# parameters deliberately listed out of dataflow/index order: HLO text
+# orders by dataflow, the byte accounting must map by parameter_index
+_OOO_PARAMS = """\
+HloModule ooo_params
+
+fused_add (pb: f32[64,32], pa: f32[8,8]) -> f32[8,8] {
+  %pb = f32[64,32] parameter(1)
+  %pa = f32[8,8] parameter(0)
+  %sl = f32[8,8] slice(%pb), slice={[0:8], [0:8]}
+  ROOT %add = f32[8,8] add(%pa, %sl)
+}
+
+ENTRY main (a: f32[8,8], b: f32[64,32]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %b = f32[64,32] parameter(1)
+  ROOT %fus = f32[8,8] fusion(%a, %b), kind=kLoop, calls=%fused_add
+}
+"""
+
+
+def test_params_in_order_sorts_by_declared_index():
+    mod = hloparse.parse_hlo(_OOO_PARAMS)
+    body = mod.computations["fused_add"]
+    # text order is pb (index 1) first; declared order must win
+    assert [i.name for i in body.instrs if i.opcode == "parameter"] == \
+        ["pb", "pa"]
+    assert [p.name for p in trace.params_in_order(body)] == ["pa", "pb"]
+
+
+def test_fusion_byte_accounting_uses_parameter_index():
+    """Operand 1 (the 64x32 source) feeds only a slice inside the body:
+    with correct index mapping the fusion reads the 8x8 slice, not the
+    full 8 KiB operand. A dataflow-order mapping would pair operand 1
+    with parameter 0 and charge the full read."""
+    rep = portmodel.analyze(_OOO_PARAMS, TPU_V5E)
+    full = 8 * 8 * 4 + 8 * 8 * 4 + 8 * 8 * 4      # out + a + slice-of-b
+    assert rep.bytes_hbm == float(full)
+
+
+_NESTED_WHILE = """\
+HloModule nested_while
+
+inner_cond (pi: (f32[8,128], s32[])) -> pred[] {
+  %pi = (f32[8,128], s32[]) parameter(0)
+  %ii = s32[] get-tuple-element(%pi), index=1
+  %ci = s32[] constant(7)
+  ROOT %lti = pred[] compare(%ii, %ci), direction=LT
+}
+
+inner_body (pib: (f32[8,128], s32[])) -> (f32[8,128], s32[]) {
+  %pib = (f32[8,128], s32[]) parameter(0)
+  %x = f32[8,128] get-tuple-element(%pib), index=0
+  %j = s32[] get-tuple-element(%pib), index=1
+  %t = f32[8,128] tanh(%x)
+  %one = s32[] constant(1)
+  %jn = s32[] add(%j, %one)
+  ROOT %tup = (f32[8,128], s32[]) tuple(%t, %jn)
+}
+
+outer_cond (po: (f32[8,128], s32[])) -> pred[] {
+  %po = (f32[8,128], s32[]) parameter(0)
+  %io = s32[] get-tuple-element(%po), index=1
+  %co = s32[] constant(50000)
+  ROOT %lto = pred[] compare(%io, %co), direction=LT
+}
+
+outer_body (pob: (f32[8,128], s32[])) -> (f32[8,128], s32[]) {
+  %pob = (f32[8,128], s32[]) parameter(0)
+  %y = f32[8,128] get-tuple-element(%pob), index=0
+  %k = s32[] get-tuple-element(%pob), index=1
+  %wi = (f32[8,128], s32[]) while(%pob), condition=%inner_cond, body=%inner_body
+  %yi = f32[8,128] get-tuple-element(%wi), index=0
+  %onek = s32[] constant(1)
+  %kn = s32[] add(%k, %onek)
+  ROOT %tupo = (f32[8,128], s32[]) tuple(%yi, %kn)
+}
+
+ENTRY main (s: (f32[8,128], s32[])) -> (f32[8,128], s32[]) {
+  %s = (f32[8,128], s32[]) parameter(0)
+  ROOT %wo = (f32[8,128], s32[]) while(%s), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"5"}}
+}
+"""
+
+
+def test_nested_while_trip_resolution():
+    """Outer trips come from backend_config (primary source), inner from
+    the condition-constant fallback; the 50000 outer-condition constant
+    is ignored (vocab-sized constants must not masquerade as trips)."""
+    mod = hloparse.parse_hlo(_NESTED_WHILE)
+    trips = hloparse.trip_counts_from_text(_NESTED_WHILE)
+    outer = next(i for i in mod.entry.instrs if i.opcode == "while")
+    assert hloparse.while_trip_count(mod, outer, trips) == 5
+    body = mod.computations["outer_body"]
+    inner = next(i for i in body.instrs if i.opcode == "while")
+    assert hloparse.while_trip_count(mod, inner, trips) == 7
+
+    rep = portmodel.analyze(_NESTED_WHILE, TPU_V5E)
+    assert rep.trips_seen["wo"] == 5
+    assert rep.trips_seen["wi"] == 7
+    # the trace mirrors the nesting structurally
+    tr = trace.lower_text(_NESTED_WHILE)
+    wo = next(op for op in tr.entry.ops if op.kind == "loop")
+    assert wo.trips == 5
+    wi = next(op for op in wo.region.ops if op.kind == "loop")
+    assert wi.trips == 7
+    # tanh runs trips_outer x trips_inner times: 8x128 = 1 vpu block
+    # per call, charged on the xlu class
+    xlu = sum(c for p, c in rep.port_occupation.items()
+              if p.startswith("VPU"))
+    assert xlu >= 5 * 7 * TPU_V5E.table["xlu"].cycles_per_unit
+
+
+def test_vocab_sized_condition_constant_does_not_become_trips():
+    trips = hloparse.trip_counts_from_text(_NESTED_WHILE)
+    assert trips["outer_cond"] == 50000          # seen in the text ...
+    mod = hloparse.parse_hlo(_NESTED_WHILE)
+    wo = next(i for i in mod.entry.instrs if i.opcode == "while")
+    # ... but without backend_config it would cap to the fallback of 1
+    wo_stripped = hloparse.Instr(wo.name, wo.opcode, wo.shapes,
+                                 wo.operands,
+                                 "condition=%outer_cond, body=%outer_body")
+    assert hloparse.while_trip_count(mod, wo_stripped, trips) == 1
+
+
+_TUPLE_SHAPES = """\
+HloModule tuple_bytes
+
+ENTRY main (a: f32[4,8], k: s32[2]) -> (f32[4,8], bf16[16]) {
+  %a = f32[4,8] parameter(0)
+  %k = s32[2] parameter(1)
+  ROOT %sorted = (f32[4,8], bf16[16]) sort(%a, %k), dimensions={0}
+}
+"""
+
+
+def test_tuple_shape_byte_accounting():
+    mod = hloparse.parse_hlo(_TUPLE_SHAPES)
+    sorted_i = mod.entry.root
+    assert sorted_i.opcode == "sort"
+    assert [s.dtype for s in sorted_i.shapes] == ["f32", "bf16"]
+    assert [s.bytes for s in sorted_i.shapes] == [4 * 8 * 4, 16 * 2]
+    assert sorted_i.shape.dims == (4, 8)          # primary shape
+    # elems sums across the flattened tuple (drives µ-op sizing)
+    assert sum(s.elems for s in sorted_i.shapes) == 4 * 8 + 16
+    rep = portmodel.analyze(_TUPLE_SHAPES, TPU_V5E)
+    # boundary traffic: tuple result + both operands, in full
+    want = (4 * 8 * 4 + 16 * 2) + 4 * 8 * 4 + 2 * 4
+    assert rep.bytes_hbm == float(want)
+    assert math.isfinite(rep.bound_cycles) and rep.bound_cycles > 0
+
+
+def test_scalar_and_empty_dim_shapes():
+    shapes = hloparse.parse_shapes("(f32[], s32[3,0,2])")
+    assert shapes[0].dims == () and shapes[0].elems == 1
+    assert shapes[1].elems == 0 and shapes[1].bytes == 0

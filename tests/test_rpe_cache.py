@@ -15,12 +15,13 @@ from benchmarks import fig3_rpe  # noqa: E402
 
 
 def _rec(kernel="copy", variant="jnp", size="S", t=1e-4):
-    return rpe.RpeRecord(kernel, variant, size, t, t * 2, t * 3)
+    return rpe.RpeRecord(kernel, variant, size, t, t * 2, t * 3,
+                         t * 2.5)
 
 
 def _nan_rec(kernel="copy", variant="jnp", size="S"):
     nan = float("nan")
-    return rpe.RpeRecord(kernel, variant, size, nan, nan, nan)
+    return rpe.RpeRecord(kernel, variant, size, nan, nan, nan, nan)
 
 
 def test_save_records_emits_strict_json(tmp_path):
@@ -96,6 +97,64 @@ def test_run_does_not_persist_failures(tmp_path, monkeypatch):
     cached = rpe.load_records(path)
     assert all(math.isfinite(r.t_meas) for r in cached)
     assert {r.kernel for r in cached} == {"copy"}
+
+
+def test_legacy_record_without_t_mca_is_rerun(tmp_path, monkeypatch):
+    # pre-backend-split cache entry: finite t_meas, no t_mca key at all
+    path = tmp_path / "cache.json"
+    path.write_text('[{"kernel": "copy", "variant": "jnp", "size": "S", '
+                    '"t_meas": 1e-4, "t_port": 2e-4, "t_naive": 3e-4}]')
+    legacy = rpe.load_records(str(path))
+    assert math.isnan(legacy[0].t_mca)      # loads, but incomplete
+    calls = []
+
+    def fake_run_block(k, v, s):
+        calls.append((k, v, s))
+        return _rec(k, v, s)
+
+    monkeypatch.setattr(rpe, "run_block", fake_run_block)
+    monkeypatch.setattr("repro.kernels.stream.ref.KERNELS_13", ("copy",))
+    fig3_rpe.run(full=False, cache=str(path))
+    assert ("copy", "jnp", "S") in calls    # backfilled, not pinned
+    refreshed = rpe.load_records(str(path))
+    assert all(math.isfinite(r.t_mca) for r in refreshed)
+
+
+def test_failed_backfill_keeps_legacy_measurement(tmp_path, monkeypatch):
+    # a legacy record whose backfill re-run CRASHES must survive in the
+    # cache file (its finite measurement is still valid data)
+    path = tmp_path / "cache.json"
+    legacy = rpe.RpeRecord("copy", "jnp", "S", 1e-4, 2e-4, 3e-4)
+    rpe.save_records([legacy], str(path))
+
+    def run_block(k, v, s):
+        if k == "copy":
+            raise RuntimeError("backfill boom")
+        return _rec(k, v, s)
+
+    monkeypatch.setattr(rpe, "run_block", run_block)
+    monkeypatch.setattr("repro.kernels.stream.ref.KERNELS_13",
+                        ("copy", "add"))
+    fig3_rpe.run(full=False, cache=str(path))
+    cached = {(r.kernel, r.variant, r.size): r
+              for r in rpe.load_records(str(path))}
+    assert ("copy", "jnp", "S") in cached           # not deleted
+    assert cached[("copy", "jnp", "S")].t_meas == pytest.approx(1e-4)
+    assert ("add", "jnp", "S") in cached            # new blocks saved
+
+
+def test_summarize_per_backend_without_nan_poisoning():
+    # one fully-populated record + one legacy record (NaN t_mca only):
+    # every backend's mean must come out finite — the NaN may shrink
+    # the mca sample, never poison its mean
+    legacy = rpe.RpeRecord("add", "jnp", "S", 1e-4, 2e-4, 3e-4)
+    s = rpe.summarize([_rec(), legacy, _nan_rec("sum_reduction")])
+    assert s["port_model"]["n"] == 2
+    assert s["mca_sched"]["n"] == 1
+    assert s["naive_baseline"]["n"] == 2
+    for model in ("port_model", "mca_sched", "naive_baseline"):
+        assert math.isfinite(s[model]["mean_rpe"])
+        assert math.isfinite(s[model]["mean_abs_rpe"])
 
 
 def test_summarize_all_overpredicted_formats_cleanly():

@@ -1,0 +1,319 @@
+"""Tentpole invariants of the trace-IR / backend split: the simulator
+never beats the analytical lower bound on any registered machine,
+decomposition runs once per module, the backend registry resolves
+aliases, compare() fans (machine, backend) pairs, the degradation
+warning fires once per fan-out (not per worker), and the planner /
+autotuner default paths are backend-identical."""
+
+import os
+import warnings as _warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backends as backends_lib
+from repro.core import portmodel, trace
+from repro.core.machine import MACHINES, TPU_V5E, registered_names
+
+_DATA = os.path.join(os.path.dirname(__file__), "data")
+
+#: every paper CPU must satisfy the acceptance invariant; TPUs ride along
+PAPER_CPUS = ("zen4", "golden_cove", "neoverse_v2")
+
+
+def _compile_text(fn, *shapes):
+    args = [jax.ShapeDtypeStruct(s, d) for s, d in shapes]
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+@pytest.fixture(scope="module")
+def fixture_hlos():
+    """The fixed fixture set: the committed golden module plus two
+    freshly-lowered shapes (straight-line compute, scanned LCD)."""
+    with open(os.path.join(_DATA, "golden.hlo")) as f:
+        golden = f.read()
+
+    def scanned(x):
+        def body(c, _):
+            return jnp.tanh(c @ c.T) @ c * 0.1, None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y
+
+    return {
+        "golden": golden,
+        "straight": _compile_text(
+            lambda a, b: jax.nn.relu(a @ b) + jnp.exp(a @ b),
+            ((256, 256), jnp.float32), ((256, 256), jnp.float32)),
+        "scanned": _compile_text(scanned, ((96, 96), jnp.float32)),
+    }
+
+
+# ---- acceptance: simulator >= analytical bound, everywhere -----------------
+
+def test_mca_never_beats_tp_bound_on_all_machines(fixture_hlos):
+    """For every registered machine and every fixture module, the
+    MCA-style simulator's cycles are >= the TP lower bound (a cycle
+    simulator can never beat perfect ILP), and the simulator actually
+    simulated (sim_cycles is set)."""
+    for tag, hlo in fixture_hlos.items():
+        nested = portmodel.compare(hlo, backends=("tp", "mca"),
+                                   parallel="serial")
+        assert set(nested) == set(registered_names())
+        for name, per in nested.items():
+            tp, mca = per["tp_bound"], per["mca_sched"]
+            assert tp.backend == "tp_bound"
+            assert mca.backend == "mca_sched"
+            assert tp.sim_cycles is None
+            assert mca.sim_cycles is not None
+            assert mca.bound_incore_cycles >= tp.bound_incore_cycles, \
+                (tag, name)
+            assert mca.bound_cycles >= tp.bound_cycles, (tag, name)
+            # the analytical fields are shared (same trace, same walk)
+            assert mca.tp_cycles == tp.tp_cycles, (tag, name)
+            assert mca.flops == tp.flops and \
+                mca.bytes_hbm == tp.bytes_hbm, (tag, name)
+
+
+def test_mca_strictly_pessimistic_somewhere(fixture_hlos):
+    """Dispatch stalls / latency chains must actually cost something:
+    on the straight-line module every paper CPU simulates strictly
+    above the TP bound (otherwise the simulator degenerated into the
+    clamp)."""
+    nested = portmodel.compare(fixture_hlos["straight"],
+                               machines=PAPER_CPUS,
+                               backends=("tp", "mca"), parallel="serial")
+    for name, per in nested.items():
+        assert per["mca_sched"].bound_incore_cycles > \
+            per["tp_bound"].bound_incore_cycles, name
+
+
+def test_mca_seconds_ordering_survives_tier_resolution(fixture_hlos):
+    """The downstream consumable (tier-resolved seconds) preserves the
+    pessimistic-or-equal ordering on every registered machine."""
+    from repro.core.machine import get_machine
+    nested = portmodel.compare(fixture_hlos["golden"],
+                               backends=("tp", "mca"), parallel="serial")
+    for name, per in nested.items():
+        m = get_machine(name)
+        assert per["mca_sched"].tier_bound_seconds(m) >= \
+            per["tp_bound"].tier_bound_seconds(m), name
+
+
+# ---- trace IR: one lowering per module -------------------------------------
+
+def test_trace_lowered_once_per_fanout(fixture_hlos):
+    hlo = fixture_hlos["scanned"]
+    portmodel._trace_cached.cache_clear()
+    portmodel._parse_cached.cache_clear()
+    portmodel.compare(hlo, backends=("tp", "mca"), parallel="serial")
+    info = portmodel._trace_cached.cache_info()
+    assert info.misses == 1         # one lowering ...
+    portmodel.compare(hlo, backends=("tp", "mca"), parallel="serial")
+    assert portmodel._trace_cached.cache_info().misses == 1
+    # ... shared by analyze() on the same text too
+    portmodel.analyze(hlo, "zen4", backend="mca")
+    assert portmodel._trace_cached.cache_info().misses == 1
+
+
+def test_trace_is_machine_independent(fixture_hlos):
+    tr = trace.lower_text(fixture_hlos["scanned"])
+    assert tr.n_ops() > 0
+    loops = [op for op in tr.entry.ops if op.kind == "loop"]
+    assert loops and loops[0].trips == 12
+    assert loops[0].region is not None and loops[0].region.boundary
+    # µ-op classes are machine-file keys, not ports
+    classes = {c for op in tr.entry.ops for c, _ in op.uops}
+    from repro.core import isa
+    assert classes <= set(isa.UOP_CLASSES)
+
+
+# ---- backend registry ------------------------------------------------------
+
+def test_backend_registry_and_aliases():
+    assert set(backends_lib.registered_backends()) >= \
+        {"tp_bound", "mca_sched"}
+    assert backends_lib.get_backend("tp").name == "tp_bound"
+    assert backends_lib.get_backend("osaca").name == "tp_bound"
+    assert backends_lib.get_backend("mca").name == "mca_sched"
+    assert backends_lib.get_backend("llvm-mca").name == "mca_sched"
+    inst = backends_lib.get_backend("tp_bound")
+    assert backends_lib.get_backend(inst) is inst
+    with pytest.raises(KeyError):
+        backends_lib.get_backend("nonesuch")
+    with pytest.raises(ValueError):
+        backends_lib.register_backend(
+            backends_lib.get_backend("tp_bound"))
+
+
+@pytest.mark.parametrize("parallel", ["serial", "process"])
+def test_compare_honours_custom_backend_instance(fixture_hlos, parallel):
+    """An ad-hoc Backend instance must run AS CONFIGURED — not be
+    swapped for the registry's default-configured instance by name."""
+    from repro.core.backends.mca_sched import McaSchedBackend
+    hlo = fixture_hlos["straight"]
+    tight = McaSchedBackend(window=1, issue_width=1)
+    default = portmodel.compare(hlo, machines=("zen4",),
+                                backends="mca", parallel=parallel)
+    custom = portmodel.compare(hlo, machines=("zen4",),
+                               backends=tight, parallel=parallel)
+    assert custom["zen4"].sim_cycles > default["zen4"].sim_cycles
+
+
+def test_two_backend_fanout_walks_once_per_machine(fixture_hlos,
+                                                   monkeypatch):
+    """The stock mca report contains the tp report (same walk): a
+    tp+mca fan-out must schedule only the simulator tasks and derive
+    the tp_bound reports — N analytic walks, not 2N."""
+    from repro.core.backends import tp_bound as tb
+    hlo = fixture_hlos["straight"]
+    calls = []
+    orig = tb._Walk.run
+
+    def counting(self, trace, name):
+        calls.append(name)
+        return orig(self, trace, name)
+
+    monkeypatch.setattr(tb._Walk, "run", counting)
+    nested = portmodel.compare(hlo, machines=("zen4", "tpu_v5e"),
+                               backends=("tp", "mca"), parallel="serial")
+    assert calls == ["mca_sched", "mca_sched"]
+    for name in ("zen4", "tpu_v5e"):
+        tp, mca = nested[name]["tp_bound"], nested[name]["mca_sched"]
+        assert tp.backend == "tp_bound" and tp.sim_cycles is None
+        assert list(nested[name]) == ["tp_bound", "mca_sched"]
+        # the derived report equals a direct tp_bound run
+        direct = portmodel.compare(hlo, machines=(name,),
+                                   parallel="serial")[name]
+        assert tp.port_occupation == direct.port_occupation
+        assert tp.bound_cycles == direct.bound_cycles
+        assert tp.t_mem_tier == direct.t_mem_tier
+        # and shares no mutable state with the mca report
+        assert tp.port_occupation is not mca.port_occupation
+
+
+def test_compare_dedupes_alias_spellings(fixture_hlos):
+    """Alias + canonical spellings are one backend: one run, one key."""
+    hlo = fixture_hlos["scanned"]
+    nested = portmodel.compare(hlo, machines=("zen4",),
+                               backends=("tp", "osaca", "tp_bound"),
+                               parallel="serial")
+    assert list(nested["zen4"]) == ["tp_bound"]
+
+
+def test_compare_shapes_flat_vs_nested(fixture_hlos):
+    hlo = fixture_hlos["scanned"]
+    flat = portmodel.compare(hlo, machines=("zen4",), parallel="serial")
+    assert isinstance(flat["zen4"], portmodel.Report)
+    single = portmodel.compare(hlo, machines=("zen4",),
+                               backends="mca", parallel="serial")
+    assert single["zen4"].backend == "mca_sched"
+    nested = portmodel.compare(hlo, machines=("zen4",),
+                               backends=("tp",), parallel="serial")
+    assert set(nested["zen4"]) == {"tp_bound"}
+
+
+def test_compare_pool_matches_serial_nested(fixture_hlos):
+    hlo = fixture_hlos["scanned"]
+    ser = portmodel.compare(hlo, backends=("tp", "mca"),
+                            parallel="serial")
+    pool = portmodel.compare(hlo, backends=("tp", "mca"),
+                             parallel="process")
+    assert list(ser) == list(pool)
+    for name in ser:
+        for b in ("tp_bound", "mca_sched"):
+            assert ser[name][b].bound_cycles == \
+                pool[name][b].bound_cycles, (name, b)
+            assert ser[name][b].sim_cycles == \
+                pool[name][b].sim_cycles, (name, b)
+
+
+# ---- degradation warning: once per fan-out, counted on the report ----------
+
+def _novpu(name):
+    import dataclasses
+    table = {k: v for k, v in TPU_V5E.table.items() if k != "vpu"}
+    return dataclasses.replace(TPU_V5E, name=name, table=table)
+
+
+@pytest.mark.parametrize("parallel", ["serial", "process"])
+def test_degradation_warns_once_per_fanout(parallel):
+    txt = _compile_text(lambda x: jnp.exp(x) + x,
+                        ((512, 512), jnp.float32))
+    MACHINES["novpu_a"] = _novpu("novpu_a")
+    MACHINES["novpu_b"] = _novpu("novpu_b")
+    try:
+        with _warnings.catch_warnings(record=True) as got:
+            _warnings.simplefilter("always")
+            reports = portmodel.compare(
+                txt, machines=("novpu_a", "novpu_b", "tpu_v5e"),
+                backends=("tp", "mca"), parallel=parallel)
+        degr = [w for w in got if issubclass(w.category, RuntimeWarning)
+                and "degraded" in str(w.message)]
+        assert len(degr) == 1           # parent warns ONCE, not 2x2
+        msg = str(degr[0].message)
+        assert "novpu_a" in msg and "novpu_b" in msg and "vpu" in msg
+        for b in ("tp_bound", "mca_sched"):
+            assert reports["novpu_a"][b].fallback_uops > 0
+            assert "vpu" in reports["novpu_a"][b].fallback_classes
+            assert reports["tpu_v5e"][b].fallback_uops == 0
+    finally:
+        del MACHINES["novpu_a"], MACHINES["novpu_b"]
+
+
+# ---- consumers: default paths identical, opt-in pessimistic ----------------
+
+def test_tuner_tp_backend_matches_default():
+    from repro.kernels import tuning
+    tuning.clear_cache()
+    for machine in PAPER_CPUS + ("tpu_v5e",):
+        legacy = tuning.decode_tiles(machine, skv=4096, dh=64, h=8,
+                                     hkv=8, batch=4)
+        via_tp = tuning.decode_tiles(machine, skv=4096, dh=64, h=8,
+                                     hkv=8, batch=4, backend="tp_bound")
+        assert (legacy.bq, legacy.bk, legacy.n_splits) == \
+            (via_tp.bq, via_tp.bk, via_tp.n_splits), machine
+        assert legacy.seconds == pytest.approx(via_tp.seconds), machine
+        f_legacy = tuning.flash_tiles(machine, s=2048, dh=64, h=8, hkv=8)
+        f_tp = tuning.flash_tiles(machine, s=2048, dh=64, h=8, hkv=8,
+                                  backend="tp_bound")
+        assert (f_legacy.bq, f_legacy.bk) == (f_tp.bq, f_tp.bk), machine
+        mca = tuning.decode_tiles(machine, skv=4096, dh=64, h=8,
+                                  hkv=8, batch=4, backend="mca_sched")
+        assert mca.seconds >= via_tp.seconds - 1e-18, machine
+
+
+def test_planner_backend_opt_in(fixture_hlos):
+    from repro.configs import get_smoke_config
+    from repro.serve import planner as planner_lib
+    cfg = get_smoke_config("yi-9b")
+    planner_lib.clear_plan_cache()
+    hlo = fixture_hlos["golden"]
+    default = planner_lib.plan_chunk_size(cfg, 2, 32, machine="zen4",
+                                          hlo_text=hlo)
+    via_tp = planner_lib.plan_chunk_size(cfg, 2, 32, machine="zen4",
+                                         hlo_text=hlo,
+                                         backend="tp_bound")
+    assert default.backend == "tp_bound"
+    assert default.chunk == via_tp.chunk
+    assert default.t_step_seconds == via_tp.t_step_seconds
+    mca = planner_lib.plan_chunk_size(cfg, 2, 32, machine="zen4",
+                                      hlo_text=hlo, backend="mca")
+    assert mca.backend == "mca_sched"
+    # pessimistic-or-equal step cost => never a larger chunk
+    assert mca.t_step_seconds >= via_tp.t_step_seconds
+    assert mca.chunk <= via_tp.chunk
+
+
+def test_uops_seconds_matches_closed_form():
+    from repro.core.machine import get_machine
+    for machine in PAPER_CPUS:
+        m = get_machine(machine)
+        e = m.table["mxu"]
+        passes = 37.5
+        want = m.seconds(passes * e.cycles_per_unit
+                         / max(1, len(e.ports)))
+        got = backends_lib.uops_seconds(m, [("mxu", passes)])
+        assert got == pytest.approx(want, rel=0, abs=0), machine
+        sim = backends_lib.uops_seconds(m, [("mxu", passes)], "mca")
+        assert sim >= got, machine
