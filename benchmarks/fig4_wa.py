@@ -4,9 +4,14 @@ TPU tile-level RMW model and a measured host experiment.
 
 Modeled curves reproduce the paper's findings:
   * Grace/TPU (auto_claim): flat 1.0 (perfect evasion)
-  * SPR (saturation_gated): 2.0 falling to ~1.75 only near saturation;
-    NT stores leave ~10% residue (1.1)
+  * SPR (saturation_gated): 2.0 falling toward the DRAM-tier residue
+    (1.1) only near saturation; NT stores leave the same ~10% residue
   * Genoa (explicit_only): flat 2.0; NT stores exact 1.0
+
+The ratios come from ``wa.ladder_traffic_ratio`` — the per-tier
+``MemTier.wa_residue`` path that ``benchmarks/fig4b_ntstore.py`` and
+the store-flavor selector (``repro.kernels.stores``) also price
+through, so fig4, fig4b, and the selector can never disagree.
 
 Measured host experiment: store-only INIT into a fresh buffer vs a
 donated (in-place) buffer — donation is the NT-store/cache-line-claim
@@ -21,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.machine import get_machine
-from repro.core.wa import store_profile, traffic_ratio_for
+from repro.core.wa import ladder_traffic_ratio, store_profile
 
 N = 1 << 22     # 16 MiB store
 
@@ -49,11 +54,11 @@ def main(quick: bool = False):
     for cores_frac in (0.1, 0.25, 0.5, 0.75, 1.0):
         parts = []
         for m, label in machines:
-            r = traffic_ratio_for(m, bw_utilization=cores_frac)
+            r = ladder_traffic_ratio(m, bw_utilization=cores_frac)
             parts.append(f"{label}={r:.2f}")
             if m.wa_mode != "auto_claim":   # NT stores only change those
-                r_nt = traffic_ratio_for(m, nt_stores=True,
-                                         bw_utilization=cores_frac)
+                r_nt = ladder_traffic_ratio(m, nt_stores=True,
+                                            bw_utilization=cores_frac)
                 parts.append(f"{label}_nt={r_nt:.2f}")
         lines.append(f"fig4,model_utilization_{cores_frac:.2f},0,"
                      + ";".join(parts))

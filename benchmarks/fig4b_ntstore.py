@@ -1,0 +1,148 @@
+"""Paper Fig. 4 (b): NT-store evasion — per-machine store-traffic ratio
+of the *selected* store flavor vs the standard path, gated in CI.
+
+For each of the paper's three machines (plus the TPU) the benchmark
+
+1. asks the store-path selector (``repro.kernels.stores``) which
+   flavor it picks for a DRAM-resident store stream,
+2. prices both flavors through the shared ladder-residue path
+   (``wa.ladder_traffic_ratio`` — the same arithmetic fig4 plots and
+   ``wa.priced_store_traffic(flavor=...)`` uses), and
+3. derives an interpret-mode traffic ratio for the NT stream kernel:
+   the padded-tile store footprint of ``stream_triad_nt`` over its
+   payload (every NT store is full-tile by construction, so the
+   *kernel-side* ratio is the tile padding overhead — the machine-side
+   allocate traffic on top of it is exactly what the model prices).
+
+The gate (also asserted when run, so CI fails loudly):
+
+* ordering Grace <= SPR <= Zen4-with-NT within the SpecI2M NT-residue
+  tolerance (0.15): Grace 1.0, SPR 1.1, Zen4-NT 1.0,
+* standard-flavor ordering strict: Grace 1.0 <= SPR <= 2.0 == Zen4,
+* Zen4's NT path ~1.0 vs ~2.0 standard (the paper's headline delta),
+* the selected-flavor ratio equals ``wa.priced_store_traffic`` on a
+  full-tile store profile of the same payload within 1e-6 — the
+  measured/modeled agreement the tentpole promises.
+
+A measured host row (standard vs NT-shaped store lowering) rides along
+like fig4's host experiment; it is reported, not gated — wall-clock on
+a shared CI host is noise, the *traffic* model is the contract.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wa
+from repro.core.machine import get_machine
+from repro.kernels.stores import plan_stores
+
+#: registered machine name -> paper Fig. 4 curve label
+_CURVES = (("neoverse_v2", "grace"), ("golden_cove", "spr"),
+           ("zen4", "genoa"), ("tpu_v5e", "tpu"))
+
+#: ordering tolerance: the SpecI2M NT residue (golden_cove DRAM-tier
+#: ``wa_residue`` = 0.1, plus headroom) — SPR's best path keeps ~10%
+#: allocate traffic that Grace and Zen4-with-NT fully evade
+ORDER_TOL = 0.15
+
+#: modeled-vs-priced agreement tolerance for the selected flavor
+PRICE_TOL = 1e-6
+
+N_ROWS, N_COLS = 1 << 8, 1 << 12      # 4 MiB f32 stream payload
+
+
+def _kernel_tile_ratio(shape=(20, 300)) -> float:
+    """Interpret-derived store-footprint ratio of the NT stream kernel.
+
+    ``stream_triad_nt`` pads a deliberately tile-misaligned shape up to
+    the native (8, 128) granule and stores only full tiles; the ratio
+    of bytes stored (padded grid) to payload bytes is the kernel-side
+    cost of guaranteeing allocate-free stores.
+    """
+    from repro.kernels.stream.kernels import _nt_grid2
+    m, n = shape
+    _, _, _, mp, npad = _nt_grid2(shape, jnp.float32)
+    # run the kernel once in interpret mode so the path is exercised,
+    # not just priced
+    from repro.kernels.stream import kernels as K
+    from repro.kernels.stream import ref as R
+    b = jnp.ones(shape, jnp.float32)
+    c = jnp.ones(shape, jnp.float32)
+    out = K.stream_triad_nt(b, c, interpret=True)
+    assert jnp.allclose(out, R.stream_triad(b, c)), "NT triad parity"
+    return (mp * npad) / float(m * n)
+
+
+def main(quick: bool = False):
+    lines = []
+    big = float(N_ROWS * N_COLS * 4) * 256   # clearly DRAM-resident
+    ratios = {}
+    for name, label in _CURVES:
+        plan = plan_stores(name, ws_bytes=big)
+        ratios[label] = plan
+        lines.append(
+            f"fig4b,{label},0,flavor={plan.flavor};"
+            f"ratio={plan.ratio:.3f};std={plan.ratio_standard:.3f};"
+            f"nt={plan.ratio_nt:.3f};sat={plan.saturation:.2f};"
+            f"wa_mode={plan.wa_mode}")
+
+        # the tentpole contract: the selected flavor's ratio must match
+        # wa.priced_store_traffic on the same payload
+        payload = float(N_ROWS * N_COLS * 4)
+        prof = wa.store_profile((N_ROWS, N_COLS), "f32")
+        priced = wa.priced_store_traffic(prof, get_machine(name),
+                                         ws_bytes=big,
+                                         flavor=plan.flavor)
+        modeled = payload * plan.ratio
+        assert abs(priced - modeled) <= PRICE_TOL * max(modeled, 1.0), (
+            f"{name}: priced {priced} != modeled {modeled}")
+        lines.append(f"fig4b,{label}_priced,0,"
+                     f"priced_bytes={priced:.0f};"
+                     f"modeled_bytes={modeled:.0f}")
+
+    grace, spr, zen = ratios["grace"], ratios["spr"], ratios["genoa"]
+    # selected-flavor ordering (paper Fig. 4): Grace <= SPR <= Zen4+NT
+    # within the SpecI2M residue tolerance
+    assert grace.ratio <= spr.ratio + ORDER_TOL, (grace, spr)
+    assert spr.ratio <= zen.ratio + ORDER_TOL, (spr, zen)
+    # standard-flavor ordering is strict
+    assert grace.ratio_standard <= spr.ratio_standard <= \
+        zen.ratio_standard, (grace, spr, zen)
+    # Zen4 headline delta: NT ~1.0 vs standard ~2.0
+    assert abs(zen.ratio_nt - 1.0) < 0.05, zen
+    assert abs(zen.ratio_standard - 2.0) < 0.05, zen
+    assert zen.flavor == "nt" and grace.flavor == "standard", (zen, grace)
+    lines.append("fig4b,gate,0,ordering=ok;zen4_nt="
+                 f"{zen.ratio_nt:.2f};zen4_std={zen.ratio_standard:.2f};"
+                 f"tol={ORDER_TOL}")
+
+    # interpret-derived kernel-side footprint of the NT path
+    tile_ratio = _kernel_tile_ratio()
+    lines.append(f"fig4b,nt_kernel_tile_footprint,0,"
+                 f"padded_over_payload={tile_ratio:.3f}")
+
+    # --- measured host: standard store lowering vs the NT-shaped one
+    # (zero-fill + offset-0 full-tile update, the donation-friendly
+    # lowering pad_to_horizon uses) — reported, not gated ---
+    x = jnp.ones((N_ROWS, N_COLS), jnp.float32)
+    std = jax.jit(lambda a: jnp.pad(a, [(0, N_ROWS), (0, 0)]))
+    nt = jax.jit(lambda a: jax.lax.dynamic_update_slice(
+        jnp.zeros((2 * N_ROWS, N_COLS), jnp.float32), a, (0, 0)))
+    for fn, tag in ((std, "host_standard_pad"), (nt, "host_nt_fill")):
+        jax.block_until_ready(fn(x))
+        best = float("inf")
+        for _ in range(3 if quick else 7):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+        gb = 2 * N_ROWS * N_COLS * 4 / best / 1e9
+        lines.append(f"fig4b,{tag},{best*1e6:.1f},bw={gb:.2f}GB/s")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -13,8 +13,9 @@ import time
 import traceback
 
 MODULES = ("table1_machines", "table2_ports", "table3_instructions",
-           "fig2_unitmix", "fig3_rpe", "fig4_wa", "fig5_memladder",
-           "fig6_serve", "fig7_decode", "roofline_sweep")
+           "fig2_unitmix", "fig3_rpe", "fig4_wa", "fig4b_ntstore",
+           "fig5_memladder", "fig6_serve", "fig7_decode",
+           "roofline_sweep")
 
 
 def main() -> None:

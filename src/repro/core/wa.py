@@ -196,10 +196,46 @@ def traffic_ratio_for(machine, *, nt_stores: bool = False,
                                  tile_full_frac=tile_full_frac)
 
 
+def ladder_traffic_ratio(machine, *, nt_stores: bool = False,
+                         bw_utilization: float | None = None,
+                         tile_full_frac: float = 1.0,
+                         ws_bytes: float | None = None,
+                         cores_active: int | None = None) -> float:
+    """`machine_traffic_ratio` with the residue taken from the ladder.
+
+    The per-tier WA-evasion residue comes from the machine's `MemTier`
+    ladder instead of the legacy Fig. 4 calibration constants: the
+    working set's home tier (the backing tier when ``ws_bytes`` is
+    omitted — store streams that evade WA are DRAM-bound by nature)
+    supplies ``wa_residue``, and the SpecI2M gate is modeled from the
+    same ladder unless an explicit ``bw_utilization`` overrides. This
+    is the single pricing path `benchmarks/fig4_wa.py`,
+    `benchmarks/fig4b_ntstore.py`, and the store-flavor selector
+    (`repro.kernels.stores`) share, so the Fig. 4 curves, the fig4b
+    gate, and the flavor decision can never disagree on a ratio.
+    """
+    if isinstance(machine, str):
+        from repro.core.machine import get_machine
+        machine = get_machine(machine)
+    from repro.core import memtier
+    tiers = memtier.tiers_of(machine)
+    home = tiers[-1] if ws_bytes is None \
+        else memtier.resolve_home(tiers, ws_bytes)
+    if bw_utilization is None:
+        bw_utilization = (memtier.modeled_saturation(machine, ws_bytes,
+                                                     cores_active)
+                          if ws_bytes is not None else 1.0)
+    return machine_traffic_ratio(wa_mode_of(machine), nt_stores=nt_stores,
+                                 bw_utilization=bw_utilization,
+                                 tile_full_frac=tile_full_frac,
+                                 residue=home.wa_residue)
+
+
 def priced_store_traffic(profile: StoreProfile, machine, *,
                          nt_stores: bool = False,
                          ws_bytes: float | None = None,
-                         cores_active: int | None = None) -> float:
+                         cores_active: int | None = None,
+                         flavor: str | None = None) -> float:
     """Total memory traffic (bytes) of one StoreProfile on one machine.
 
     The stored payload is priced at the machine's Fig. 4 ratio evaluated
@@ -212,18 +248,33 @@ def priced_store_traffic(profile: StoreProfile, machine, *,
     whole tiles, so only the machine's base WA behaviour applies to it.
     Used by repro.serve.kv_traffic to report the per-machine
     donated-vs-copied KV-update delta.
+
+    ``flavor`` opts into store-flavor pricing: ``"standard"`` / ``"nt"``
+    (or ``"auto"``, resolved by the per-machine selector in
+    ``repro.kernels.stores``) prices through the memory ladder's
+    per-tier residues (:func:`ladder_traffic_ratio`) instead of the
+    legacy Fig. 4 constants, so the result matches what the selected
+    store kernel actually generates. The legacy ``nt_stores`` keyword
+    keeps the historical constants when ``flavor`` is None.
     """
+    if flavor is not None:
+        from repro.kernels.stores import resolve_flavor
+        nt_stores = resolve_flavor(flavor, machine, ws_bytes=ws_bytes,
+                                   cores_active=cores_active) == "nt"
+        ratio_fn = ladder_traffic_ratio
+    else:
+        ratio_fn = traffic_ratio_for
     stored = profile.stored_bytes
     full_frac = 1.0 - profile.rmw_read_bytes / stored if stored > 0 else 1.0
-    ratio = traffic_ratio_for(machine, nt_stores=nt_stores,
-                              tile_full_frac=full_frac,
-                              ws_bytes=ws_bytes, cores_active=cores_active)
+    ratio = ratio_fn(machine, nt_stores=nt_stores,
+                     tile_full_frac=full_frac,
+                     ws_bytes=ws_bytes, cores_active=cores_active)
     traffic = stored * ratio
     if profile.copy_bytes:
-        ratio_full = traffic_ratio_for(machine, nt_stores=nt_stores,
-                                       tile_full_frac=1.0,
-                                       ws_bytes=ws_bytes,
-                                       cores_active=cores_active)
+        ratio_full = ratio_fn(machine, nt_stores=nt_stores,
+                              tile_full_frac=1.0,
+                              ws_bytes=ws_bytes,
+                              cores_active=cores_active)
         traffic += profile.copy_bytes * (1.0 + ratio_full)
     return traffic
 

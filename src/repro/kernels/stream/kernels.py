@@ -28,13 +28,57 @@ except Exception:         # pragma: no cover - API drift guard
 DEFAULT_BM = 256          # rows per block
 DEFAULT_BN = 512          # cols per block (multiple of 128)
 
+#: jnp dtype name -> the short name `repro.core.wa.native_tile` expects
+_DTYPE_SHORT = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
+                "int32": "s32", "int8": "s8", "uint8": "u8"}
+
 
 def _grid2(shape, bm, bn):
+    """(grid, bm, bn) for an exact block tiling of a 2-D shape."""
     m, n = shape
     bm = min(bm, m)
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0, (shape, bm, bn)
     return (m // bm, n // bn), bm, bn
+
+
+def _nt_grid2(shape, dtype, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """Tile-granule-snapped blocking for the NT store path.
+
+    Returns ``(grid, bm, bn, mp, np)``: block sizes snapped to
+    multiples of the native (sublane, lane) store granule of ``dtype``
+    and the padded extents ``(mp, np)`` they tile exactly — every
+    store an NT kernel issues overwrites whole tiles (traffic ratio
+    1.0 by construction, the TPU NT-store analogue; DESIGN.md §2).
+    """
+    from repro.core.wa import native_tile
+    st, sl = native_tile(_DTYPE_SHORT.get(jnp.dtype(dtype).name, "f32"))
+    m, n = shape
+    bm = max(st, min((bm // st) * st, -(-m // st) * st))
+    bn = max(sl, min((bn // sl) * sl, -(-n // sl) * sl))
+    mp, npad = -(-m // bm) * bm, -(-n // bn) * bn
+    return (mp // bm, npad // bn), bm, bn, mp, npad
+
+
+def _nt_call(kernel, args, shape, dtype, *, interpret):
+    """Run a 2-D elementwise kernel on the tile-padded NT grid.
+
+    Inputs are zero-padded up to the snapped grid, every output block
+    is a full aligned tile multiple, and the result is sliced back to
+    ``shape`` — numerics identical to the standard-blocked variant,
+    store traffic provably allocate-free on the tile grid.
+    """
+    grid, bm, bn, mp, npad = _nt_grid2(shape, dtype)
+    m, n = shape
+    pad = [(0, mp - m), (0, npad - n)]
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec] * len(args),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((mp, npad), dtype),
+        interpret=interpret)(*(jnp.pad(a, pad) for a in args))
+    return out[:m, :n]
 
 
 # --- elementwise family -----------------------------------------------------
@@ -73,11 +117,30 @@ def init_partial(shape, scalar=3.0, dtype=jnp.float32, *, interpret=False):
     return padded[:m, :n]
 
 
+def init_nt(shape, scalar=3.0, dtype=jnp.float32, *, interpret=False):
+    """INIT through the NT store path: tile-granule-snapped blocks.
+
+    Handles arbitrary (also misaligned) shapes by writing the padded
+    full-tile grid and slicing — the WA-evading counterpart of
+    :func:`init_partial`, which deliberately pays the full allocate
+    cost on the same shapes.
+    """
+    return _nt_call(functools.partial(_init_kernel, scalar=scalar), (),
+                    shape, dtype, interpret=interpret)
+
+
 def _copy_kernel(x_ref, o_ref):
     o_ref[...] = x_ref[...]
 
 
+def copy_nt(x, *, interpret=False):
+    """COPY with NT (full-tile aligned, padded-grid) stores."""
+    return _nt_call(_copy_kernel, (x,), x.shape, x.dtype,
+                    interpret=interpret)
+
+
 def copy(x, *, bm=DEFAULT_BM, bn=DEFAULT_BN, interpret=False):
+    """COPY: o = x, standard block tiling."""
     grid, bm, bn = _grid2(x.shape, bm, bn)
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     return pl.pallas_call(
@@ -91,6 +154,7 @@ def _add_kernel(a_ref, b_ref, o_ref):
 
 
 def add(a, b, *, bm=DEFAULT_BM, bn=DEFAULT_BN, interpret=False):
+    """ADD: o = a + b, standard block tiling."""
     grid, bm, bn = _grid2(a.shape, bm, bn)
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     return pl.pallas_call(
@@ -103,7 +167,14 @@ def _update_kernel(a_ref, o_ref, *, scalar):
     o_ref[...] = a_ref[...] * scalar
 
 
+def update_nt(a, s=2.0, *, interpret=False):
+    """UPDATE with NT (full-tile aligned, padded-grid) stores."""
+    return _nt_call(functools.partial(_update_kernel, scalar=s), (a,),
+                    a.shape, a.dtype, interpret=interpret)
+
+
 def update(a, s=2.0, *, bm=DEFAULT_BM, bn=DEFAULT_BN, interpret=False):
+    """UPDATE: o = s * a, standard block tiling."""
     grid, bm, bn = _grid2(a.shape, bm, bn)
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     return pl.pallas_call(
@@ -117,8 +188,15 @@ def _triad_kernel(b_ref, c_ref, o_ref, *, scalar):
     o_ref[...] = b_ref[...] + scalar * c_ref[...]
 
 
+def stream_triad_nt(b, c, s=2.0, *, interpret=False):
+    """STREAM triad with NT (full-tile aligned, padded-grid) stores."""
+    return _nt_call(functools.partial(_triad_kernel, scalar=s), (b, c),
+                    b.shape, b.dtype, interpret=interpret)
+
+
 def stream_triad(b, c, s=2.0, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
                  interpret=False):
+    """STREAM triad: o = b + s * c, standard block tiling."""
     grid, bm, bn = _grid2(b.shape, bm, bn)
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     return pl.pallas_call(
@@ -134,6 +212,7 @@ def _striad_kernel(b_ref, c_ref, d_ref, o_ref):
 
 def schoenauer_triad(b, c, d, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
                      interpret=False):
+    """Schoenauer triad: o = b + c * d (three loads, one store)."""
     grid, bm, bn = _grid2(b.shape, bm, bn)
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     return pl.pallas_call(
@@ -168,6 +247,7 @@ def _pi_kernel(o_ref, *, n, bn):
 
 
 def pi_integration(n, *, bn=4096, interpret=False):
+    """Midpoint-rule quadrature of 4/(1+x^2) on [0,1) with n points."""
     assert n % bn == 0
     parts = pl.pallas_call(
         functools.partial(_pi_kernel, n=n, bn=bn),
@@ -217,6 +297,7 @@ def _jacobi3d_kernel(u_ref, o_ref):
 
 
 def jacobi_3d7pt(u, *, bz=8, interpret=False):
+    """3-D 7-point Jacobi sweep, depth-tiled with a +-1 halo."""
     d, h, w = u.shape
     m = d - 2
     bz = min(bz, m)
@@ -262,6 +343,7 @@ def _gs_kernel(u_ref, o_ref, *, sweeps):
 
 
 def gauss_seidel_2d5pt(u, sweeps=1, *, interpret=False):
+    """In-place 2-D 5-point Gauss-Seidel sweeps (row wavefront)."""
     return pl.pallas_call(
         functools.partial(_gs_kernel, sweeps=sweeps),
         grid=(1,),

@@ -4,6 +4,13 @@
 CPU) and the pure-jnp oracle. ``auto`` = Pallas on TPU, oracle elsewhere
 (the oracle is what XLA would fuse anyway; the kernel exists to control
 tiling and store alignment explicitly on TPU).
+
+Store-heavy wrappers (INIT/COPY/UPDATE/triad) additionally take
+``flavor`` (``standard | nt | auto``): ``nt`` always runs the
+full-tile-aligned NT store variant (interpret mode off-TPU, the parity
+path), ``auto`` asks :mod:`repro.kernels.stores` to pick per machine and
+executes NT only on a real TPU — elsewhere the selection is recorded in
+plans/pricing but the standard kernel runs (modeled-only fallback).
 """
 
 from __future__ import annotations
@@ -24,45 +31,66 @@ def _route(pallas_fn, ref_fn, impl, *args, **kw):
     return pallas_fn(*args, interpret=interpret_mode(), **kw)
 
 
-@partial(jax.jit, static_argnames=("shape", "dtype", "impl"))
-def init(shape, scalar=3.0, dtype=jnp.float32, impl="auto"):
+def _nt_route(nt_fn, pallas_fn, ref_fn, impl, flavor, *args, **kw):
+    """_route plus the store-flavor leg: NT kernel when it resolves on."""
+    from repro.kernels.stores import executed_flavor
+    if executed_flavor(flavor) == "nt":
+        return nt_fn(*args, interpret=interpret_mode(), **kw)
+    return _route(pallas_fn, ref_fn, impl, *args, **kw)
+
+
+@partial(jax.jit, static_argnames=("shape", "dtype", "impl", "flavor"))
+def init(shape, scalar=3.0, dtype=jnp.float32, impl="auto",
+         flavor="standard"):
+    """INIT a[:] = s; ``flavor`` picks the store path (see module doc)."""
+    from repro.kernels.stores import executed_flavor
+    if executed_flavor(flavor) == "nt":
+        return K.init_nt(shape, scalar, dtype, interpret=interpret_mode())
     if not use_pallas(impl):
         return R.init(shape, scalar, dtype)
     return K.init_store(shape, scalar, dtype, interpret=interpret_mode())
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def copy(b, impl="auto"):
-    return _route(K.copy, R.copy, impl, b)
+@partial(jax.jit, static_argnames=("impl", "flavor"))
+def copy(b, impl="auto", flavor="standard"):
+    """COPY o = b through the selected store path."""
+    return _nt_route(K.copy_nt, K.copy, R.copy, impl, flavor, b)
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def add(b, c, impl="auto"):
+    """ADD o = b + c."""
     return _route(K.add, R.add, impl, b, c)
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def update(a, s=2.0, impl="auto"):
-    return _route(K.update, R.update, impl, a, s)
+@partial(jax.jit, static_argnames=("impl", "flavor"))
+def update(a, s=2.0, impl="auto", flavor="standard"):
+    """UPDATE o = s * a through the selected store path."""
+    return _nt_route(K.update_nt, K.update, R.update, impl, flavor, a, s)
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def stream_triad(b, c, s=2.0, impl="auto"):
-    return _route(K.stream_triad, R.stream_triad, impl, b, c, s)
+@partial(jax.jit, static_argnames=("impl", "flavor"))
+def stream_triad(b, c, s=2.0, impl="auto", flavor="standard"):
+    """STREAM triad o = b + s * c through the selected store path."""
+    return _nt_route(K.stream_triad_nt, K.stream_triad, R.stream_triad,
+                     impl, flavor, b, c, s)
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def schoenauer_triad(b, c, d, impl="auto"):
+    """Schoenauer triad o = b + c * d."""
     return _route(K.schoenauer_triad, R.schoenauer_triad, impl, b, c, d)
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def sum_reduction(a, impl="auto"):
+    """Full sum reduction of a."""
     return _route(K.sum_reduction, R.sum_reduction, impl, a)
 
 
 @partial(jax.jit, static_argnames=("n", "impl"))
 def pi_integration(n, impl="auto"):
+    """Midpoint quadrature of 4/(1+x^2) with n points."""
     if not use_pallas(impl):
         return R.pi_integration(n)
     return K.pi_integration(n, interpret=interpret_mode())
@@ -70,16 +98,19 @@ def pi_integration(n, impl="auto"):
 
 @partial(jax.jit, static_argnames=("impl",))
 def jacobi_2d5pt(u, impl="auto"):
+    """2-D 5-point Jacobi sweep over the interior of u."""
     return _route(K.jacobi_2d5pt, R.jacobi_2d5pt, impl, u)
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def jacobi_3d7pt(u, impl="auto"):
+    """3-D 7-point Jacobi sweep over the interior of u."""
     return _route(K.jacobi_3d7pt, R.jacobi_3d7pt, impl, u)
 
 
 @partial(jax.jit, static_argnames=("sweeps", "impl"))
 def gauss_seidel_2d5pt(u, sweeps=1, impl="auto"):
+    """Row-wavefront 2-D Gauss-Seidel, `sweeps` iterations."""
     if not use_pallas(impl):
         return R.gauss_seidel_2d5pt(u, sweeps)
     return K.gauss_seidel_2d5pt(u, sweeps, interpret=interpret_mode())

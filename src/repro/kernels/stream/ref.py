@@ -19,26 +19,32 @@ def init(shape, scalar=3.0, dtype=jnp.float32):
 
 
 def copy(b):
-    return b + 0.0       # materialized copy
+    """COPY: o = b (materialized)."""
+    return b + 0.0
 
 
 def add(b, c):
+    """ADD: o = b + c."""
     return b + c
 
 
 def update(a, s=2.0):
+    """UPDATE: o = s * a."""
     return a * s
 
 
 def stream_triad(b, c, s=2.0):
+    """STREAM triad: o = b + s * c."""
     return b + s * c
 
 
 def schoenauer_triad(b, c, d):
+    """Schoenauer triad: o = b + c * d."""
     return b + c * d
 
 
 def sum_reduction(a):
+    """Full sum reduction."""
     return jnp.sum(a)
 
 
@@ -55,6 +61,7 @@ def jacobi_2d5pt(u):
 
 
 def jacobi_3d7pt(u):
+    """(D, H, W) -> interior 7-point average."""
     c = 1.0 / 6.0
     return c * (u[:-2, 1:-1, 1:-1] + u[2:, 1:-1, 1:-1] +
                 u[1:-1, :-2, 1:-1] + u[1:-1, 2:, 1:-1] +
@@ -73,6 +80,7 @@ def jacobi_3d11pt(u):
 
 
 def jacobi_3d27pt(u):
+    """(D, H, W) -> interior 27-point (full 3x3x3 box) average."""
     acc = 0.0
     for dz in (0, 1, 2):
         for dy in (0, 1, 2):

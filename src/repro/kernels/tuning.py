@@ -65,6 +65,7 @@ class TilePlan:
     seconds: float            # modeled kernel time of the priced shape
     home_tier: str            # tier the resident tile set resolves to
     ws_bytes: float           # per-step resident working set
+    store_flavor: str = "standard"   # selected store path (stores.py)
 
 
 def default_machine() -> str:
@@ -185,7 +186,10 @@ def flash_tiles(machine: str, *, s: int, dh: int, h: int, hkv: int,
                             ws_bytes=ws)
             if best is None or total < best.seconds * (1.0 - 1e-9):
                 best = cand
-    return best
+    from repro.kernels.stores import select_store_flavor
+    return dataclasses.replace(
+        best, store_flavor=select_store_flavor(
+            m.name, ws_bytes=s * 2.0 * dh * eb * hkv))
 
 
 @lru_cache(maxsize=512)
@@ -238,7 +242,11 @@ def decode_tiles(machine: str, *, skv: int, dh: int, h: int, hkv: int,
                             home_tier=home.name, ws_bytes=ws)
             if best is None or total < best.seconds * (1.0 - 1e-9):
                 best = cand
-    return best
+    from repro.kernels.stores import select_store_flavor
+    return dataclasses.replace(
+        best, store_flavor=select_store_flavor(
+            m.name, ws_bytes=batch * skv * 2.0 * dh * eb * hkv,
+            cores_active=min(batch * best.n_splits, cores)))
 
 
 def fit_block(block: int, s: int) -> int:

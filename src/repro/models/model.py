@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import stores as stores_lib
 from repro.models import attention as attn_lib
 from repro.models import layers as L
 from repro.models import moe as moe_lib
@@ -386,7 +387,8 @@ def _project(x, w, b=None):
 
 def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
                 positions, cache, pos, cache_len: int | None = None,
-                attn_impl: str | None = None, kv_len: int | None = None):
+                attn_impl: str | None = None, kv_len: int | None = None,
+                store_flavor: str | None = None):
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_eff
     q = _project(x, p["wq"], p.get("bq"))
@@ -404,20 +406,13 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
     window = cfg.sliding_window if local else None
 
     new_cache = None
+    flav = store_flavor or "standard"
     if mode == "decode":
-        if jnp.ndim(pos) == 0:
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
-        else:
-            # per-slot positions (continuous batching): each batch row
-            # writes its own cache row in place
-            row_dus = jax.vmap(
-                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
-                    c, u, i, axis=0))
-            kc = row_dus(cache["k"], k.astype(cache["k"].dtype), pos)
-            vc = row_dus(cache["v"], v.astype(cache["v"].dtype), pos)
+        # the in-place KV row writes route through the store-flavor door
+        # (repro.kernels.stores): standard = the historical dus paths,
+        # nt = the cache-aliased full-tile Pallas writer
+        kc = stores_lib.kv_row_update(cache["k"], k, pos, flavor=flav)
+        vc = stores_lib.kv_row_update(cache["v"], v, pos, flavor=flav)
         y = attn_lib.decode_attention(q, kc, vc, pos, window=window,
                                       impl=attn_impl or "ref",
                                       kv_len=kv_len)
@@ -432,8 +427,8 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
                 # build the KV buffer at the full decode horizon in the
                 # prefill graph itself — decode then updates it in place
                 # (donation), with no post-hoc jnp.pad regrow/copy
-                pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
-                kd, vd = jnp.pad(kd, pad), jnp.pad(vd, pad)
+                kd = stores_lib.pad_to_horizon(kd, cache_len, flavor=flav)
+                vd = stores_lib.pad_to_horizon(vd, cache_len, flavor=flav)
             new_cache = {"k": kd, "v": vd}
     out = jnp.einsum("bshe,hed->bsd", y, p["wo"])
     return out, new_cache
@@ -469,7 +464,8 @@ def _slstm_mixer(cfg, p, x, *, mode, cache):
 
 def apply_block(cfg: ModelConfig, blk: str, p: dict, x, *, mode: str,
                 positions, cache, pos, cache_len: int | None = None,
-                attn_impl: str | None = None, kv_len: int | None = None):
+                attn_impl: str | None = None, kv_len: int | None = None,
+                store_flavor: str | None = None):
     """Returns (x_out, aux_loss, new_cache)."""
     mixer, ffn = blk.split(":")
     hx = L.rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -478,7 +474,8 @@ def apply_block(cfg: ModelConfig, blk: str, p: dict, x, *, mode: str,
                                    local=(mixer == "attn_local"),
                                    mode=mode, positions=positions,
                                    cache=cache, pos=pos, cache_len=cache_len,
-                                   attn_impl=attn_impl, kv_len=kv_len)
+                                   attn_impl=attn_impl, kv_len=kv_len,
+                                   store_flavor=store_flavor)
     elif mixer == "mamba":
         y, new_cache = _mamba_mixer(cfg, p["mixer"], hx, mode=mode,
                                     cache=cache)
@@ -520,7 +517,8 @@ def _remat_wrap(cfg, fn):
 def forward(cfg: ModelConfig, params: dict, batch: dict, *,
             mode: str = "train",
             cache: dict | None = None, pos=None, cache_len: int | None = None,
-            attn_impl: str | None = None, kv_len: int | None = None):
+            attn_impl: str | None = None, kv_len: int | None = None,
+            store_flavor: str | None = None):
     """Run the model.
 
     batch: {"tokens": (B,S) int32} or {"embeds": (B,S,d)}; optional
@@ -537,6 +535,9 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
                       models.attention.decode_attention) and `kv_len`
                       statically bounds how much of the cache horizon a
                       step may read (occupancy bound, repro.serve).
+    `store_flavor` ("standard"|"nt"|"auto", None = standard) picks the
+    KV-writer store path (repro.kernels.stores): how decode rows are
+    written into the cache and how prefill pads to the horizon.
     Returns logits (B, S, V) plus aux-loss scalar as (logits, aux[, cache]).
     """
     if cfg.embed_inputs:
@@ -584,7 +585,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
                                        mode=mode, positions=positions,
                                        cache=c_r[str(j)], pos=pos,
                                        cache_len=cache_len,
-                                       attn_impl=attn_impl, kv_len=kv_len)
+                                       attn_impl=attn_impl, kv_len=kv_len,
+                                       store_flavor=store_flavor)
                 aux_total = aux_total + a
                 new_slices[str(j)] = nc
             new_slices_all.append(new_slices)
@@ -603,7 +605,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
                                        mode=mode, positions=positions,
                                        cache=cj, pos=pos,
                                        cache_len=cache_len,
-                                       attn_impl=attn_impl, kv_len=kv_len)
+                                       attn_impl=attn_impl, kv_len=kv_len,
+                                       store_flavor=store_flavor)
                 aux = aux + a
                 if nc is not None:
                     new_slices[str(j)] = nc
@@ -627,7 +630,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
         x, a, nc = apply_block(cfg, blk, params["tail"][str(i)], x,
                                mode=mode, positions=positions,
                                cache=ci, pos=pos, cache_len=cache_len,
-                               attn_impl=attn_impl, kv_len=kv_len)
+                               attn_impl=attn_impl, kv_len=kv_len,
+                               store_flavor=store_flavor)
         aux_total = aux_total + a
         if nc is not None and mode in ("prefill", "decode"):
             new_cache["tail"][str(i)] = nc

@@ -22,7 +22,8 @@ from repro.models import model as M
 def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
                              temperature: float = 0.0,
                              attn_impl: str | None = None,
-                             kv_len: int | None = None):
+                             kv_len: int | None = None,
+                             store_flavor: str | None = None):
     """Build the n-token decode chunk: one dispatch, n in-graph steps.
 
     Returns ``step(params, cache, tokens, pos, key) -> (toks, cache, pos)``
@@ -38,7 +39,8 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
     lifetime and rejects requests beyond it; each distinct ``kv_len``
     is its own compilation). Token ``i`` of the chunk reads at most
     ``kv_len`` cache rows instead of the full horizon — the split-KV
-    traffic bound at dispatch granularity.
+    traffic bound at dispatch granularity. ``store_flavor`` picks the
+    KV-writer store path (repro.kernels.stores; None = standard).
     """
     assert cfg.embed_inputs, "chunked decode needs a token embedding"
     assert n_tokens >= 1
@@ -49,7 +51,8 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
             logits, _, new_cache = M.forward(cfg, params, {"tokens": tok},
                                             mode="decode", cache=cache,
                                             pos=pos, attn_impl=attn_impl,
-                                            kv_len=kv_len)
+                                            kv_len=kv_len,
+                                            store_flavor=store_flavor)
             # some mixers emit recurrent state in compute dtype (bf16);
             # the cache contract (model.cache_shapes) carries them f32 —
             # pin the scan carry to the contract's dtypes

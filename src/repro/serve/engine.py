@@ -64,7 +64,8 @@ class ServeEngine:
                  temperature: float = 0.0, seed: int = 0,
                  machine: str | None = None,
                  attn_impl: str | None = None,
-                 kv_len: int | None = None):
+                 kv_len: int | None = None,
+                 store_flavor: str = "auto"):
         assert cfg.embed_inputs, "serve engine needs a token-id model"
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
@@ -75,21 +76,30 @@ class ServeEngine:
         # planner prices the occupancy-bounded kernel step instead of
         # the dense full-horizon one.
         self.attn_impl, self.kv_len = attn_impl, kv_len
+        # store_flavor picks the KV-writer store path
+        # (repro.kernels.stores): "auto" records the per-machine
+        # selection on the plan but executes NT kernels only on a real
+        # TPU, so off-TPU serving keeps the standard XLA path.
+        self.store_flavor = store_flavor
         if chunk is None:
-            chunk = plan_chunk_size(cfg, max_slots, max_len,
-                                    machine=machine,
-                                    occupancy=kv_len).chunk
+            self.plan = plan_chunk_size(cfg, max_slots, max_len,
+                                        machine=machine, occupancy=kv_len,
+                                        store_flavor=store_flavor)
+            chunk = self.plan.chunk
+        else:
+            self.plan = None     # explicit chunk: no analytic plan made
         self.chunk = max(1, int(chunk))
         self.cache = M.init_cache(cfg, max_slots, max_len)
         self._decode = jax.jit(
             make_chunked_decode_step(cfg, self.chunk, self.temperature,
-                                     attn_impl=attn_impl, kv_len=kv_len),
+                                     attn_impl=attn_impl, kv_len=kv_len,
+                                     store_flavor=store_flavor),
             donate_argnums=(1,))
         self._insert = jax.jit(make_insert_step(cfg), donate_argnums=(0,))
         # jit retraces per prompt length/batch shape on its own — one
         # wrapper serves every admission path
         self._prefill = jax.jit(serve_lib.make_prefill_step(
-            cfg, cache_len=max_len))
+            cfg, cache_len=max_len, store_flavor=store_flavor))
         self._key = jax.random.PRNGKey(seed)
         self.slots: list = [None] * max_slots
         self._tok = np.zeros((max_slots, 1), np.int32)

@@ -131,7 +131,8 @@ def decode_read_traffic(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def kv_update_traffic(cfg: ModelConfig, batch: int, max_len: int, *,
-                      machines=None, nt_stores: bool = False) -> list:
+                      machines=None, nt_stores: bool = False,
+                      flavor: str | None = None) -> list:
     """Per-machine donated-vs-copied KV-update traffic, one dict per row.
 
     Rows carry the machine's WA mode, the per-decode-step traffic of the
@@ -139,17 +140,31 @@ def kv_update_traffic(cfg: ModelConfig, batch: int, max_len: int, *,
     and their delta — what cache donation saves on that machine, priced
     through its Fig. 4 behavioural mode with the SpecI2M gate modeled on
     the full cache working set.
+
+    ``flavor`` switches pricing to the store-flavor path
+    (repro.kernels.stores): ``"auto"`` resolves each machine's cheaper
+    flavor against the cache working set, the residues come from the
+    MemTier ladder, and every row records the ``store_flavor`` it was
+    priced with. ``flavor=None`` keeps the legacy ``nt_stores``
+    calibration-constant pricing (and records the flavor that implies).
     """
+    from repro.kernels.stores import resolve_flavor
     profs = decode_kv_profiles(cfg, batch, max_len)
     rows = []
     for name in (machines if machines is not None else registered_names()):
         m = get_machine(name)
-        kw = dict(nt_stores=nt_stores, ws_bytes=profs["cache_bytes"],
-                  cores_active=m.cores)
+        kw = dict(ws_bytes=profs["cache_bytes"], cores_active=m.cores)
+        if flavor is not None:
+            resolved = resolve_flavor(flavor, m, **kw)
+            kw["flavor"] = resolved
+        else:
+            resolved = "nt" if nt_stores else "standard"
+            kw["nt_stores"] = nt_stores
         donated = wa.priced_store_traffic(profs["donated"], m, **kw)
         copied = wa.priced_store_traffic(profs["copied"], m, **kw)
         rows.append({
             "machine": m.name, "wa_mode": m.wa_mode,
+            "store_flavor": resolved,
             "stored_bytes": profs["donated"].stored_bytes,
             "donated_bytes": donated, "copied_bytes": copied,
             "delta_bytes": copied - donated,

@@ -61,6 +61,10 @@ class ChunkPlan:
     per_machine_dense: dict | None = None
     # which scheduling backend priced the step (core/backends)
     backend: str = "tp_bound"
+    # KV-writer store flavor resolved for the plan's machine
+    # (repro.kernels.stores) and the per-machine selections
+    store_flavor: str = "standard"
+    per_machine_flavor: dict | None = None
 
 
 def clear_plan_cache() -> None:
@@ -149,7 +153,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                     max_chunk: int = 32,
                     hlo_text: str | None = None,
                     occupancy: int | None = None,
-                    backend: str = "tp_bound") -> ChunkPlan:
+                    backend: str = "tp_bound",
+                    store_flavor: str = "auto") -> ChunkPlan:
     """Pick the decode chunk size from the port model's per-step cost.
 
     chunk = ceil(dispatch_overhead / (overhead_frac * t_step)) clamped to
@@ -169,6 +174,12 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     simulator's pessimistic-or-equal step cost (never a larger chunk
     than the default). Plans (and the lowered HLO) are memoized;
     passing an explicit ``hlo_text`` bypasses the plan cache.
+
+    ``store_flavor`` ("standard" | "nt" | "auto") is resolved per
+    machine against the slot cache working set
+    (repro.kernels.stores) and recorded on the plan — ``auto`` picks
+    each machine's cheaper modeled store path, so every plan knows
+    which KV-writer flavor it was priced for.
     """
     from repro.core.backends import get_backend
     backend = get_backend(backend).name     # canonical (aliases fold)
@@ -179,7 +190,7 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     if hlo_text is None:
         cache_key = (cfg, batch, max_len, machine, dispatch_overhead_s,
                      overhead_frac, max_chunk, occupancy, backend,
-                     registered_names())
+                     store_flavor, registered_names())
         hit = _PLAN_CACHE.get(cache_key)
         if hit is not None:
             return hit
@@ -200,11 +211,21 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     chunk = 1 if t_step <= 0 else math.ceil(
         dispatch_overhead_s / (overhead_frac * t_step))
     chunk = max(1, min(max_chunk, chunk))
+    from repro.kernels.stores import resolve_flavor
+    from repro.serve.kv_traffic import kv_row_bytes
+    cache_ws = kv_row_bytes(cfg, batch) * max_len
+    per_machine_flavor = {
+        name: resolve_flavor(store_flavor, name, ws_bytes=cache_ws,
+                             cores_active=get_machine(name).cores)
+        for name in per_machine}
     plan = ChunkPlan(chunk=chunk, machine=get_machine(machine).name,
                      t_step_seconds=t_step, per_machine=per_machine,
                      occupancy=occupancy,
                      per_machine_dense=per_machine_dense,
-                     backend=backend)
+                     backend=backend,
+                     store_flavor=per_machine_flavor[
+                         get_machine(machine).name],
+                     per_machine_flavor=per_machine_flavor)
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = plan
     return plan

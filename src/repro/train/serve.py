@@ -23,16 +23,20 @@ from repro.models import model as M
 from repro.train.step import model_inputs
 
 
-def make_prefill_step(cfg: ModelConfig, cache_len: int | None = None):
+def make_prefill_step(cfg: ModelConfig, cache_len: int | None = None,
+                      store_flavor: str | None = None):
     """Prefill step: (params, batch) -> (last-token logits, cache).
 
     ``cache_len`` preallocates the attention KV buffers at the full decode
     horizon inside the prefill graph — the serve engine's slot caches are
     built once here instead of being regrown (copied) after the fact.
+    ``store_flavor`` picks the cache-fill store path
+    (repro.kernels.stores; None = standard).
     """
     def prefill(params, batch):
         logits, aux, cache = M.forward(cfg, params, model_inputs(cfg, batch),
-                                       mode="prefill", cache_len=cache_len)
+                                       mode="prefill", cache_len=cache_len,
+                                       store_flavor=store_flavor)
         return logits, cache
     return prefill
 

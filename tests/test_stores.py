@@ -1,0 +1,244 @@
+"""Store-flavor selector, NT kernel parity, and plan-record threading.
+
+Pins the paper's Fig. 4 store-path decisions per machine (zen4 -> nt,
+grace -> standard, SPR gated on modeled saturation), checks the NT
+stream/KV-writer kernels agree with the standard path numerically in
+interpret mode, and checks the chosen flavor is recorded end to end
+through tile plans, chunk plans, and KV traffic rows.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import wa
+from repro.kernels import stores, tuning
+from repro.kernels.stream import kernels as K
+from repro.kernels.stream import ops
+from repro.kernels.stream import ref as R
+
+BIG = 1 << 30        # clearly DRAM-resident working set
+
+
+# --- selector pins (paper Fig. 4) ------------------------------------------
+
+def test_zen4_selects_nt():
+    assert stores.select_store_flavor("zen4", ws_bytes=BIG) == "nt"
+    plan = stores.plan_stores("zen4", ws_bytes=BIG)
+    assert plan.flavor == "nt"
+    assert plan.ratio_nt == pytest.approx(1.0)
+    assert plan.ratio_standard == pytest.approx(2.0)
+
+
+def test_grace_and_tpu_select_standard():
+    for name in ("neoverse_v2", "tpu_v5e"):
+        plan = stores.plan_stores(name, ws_bytes=BIG)
+        assert plan.flavor == "standard", name
+        # auto-claim already evades: NT buys nothing
+        assert plan.ratio_nt == pytest.approx(plan.ratio_standard)
+        assert plan.ratio == pytest.approx(1.0)
+
+
+def test_spr_gated_on_modeled_saturation():
+    # full socket: SpecI2M engages, NT is redundant (tie -> standard)
+    full = stores.plan_stores("golden_cove", ws_bytes=BIG)
+    assert full.saturation == pytest.approx(1.0)
+    assert full.flavor == "standard"
+    assert full.ratio == pytest.approx(1.1)
+    # single core: interface unsaturated, the gate is open -> NT wins
+    one = stores.plan_stores("golden_cove", ws_bytes=BIG, cores_active=1)
+    assert one.saturation < 0.5
+    assert one.flavor == "nt"
+    assert one.ratio_nt < one.ratio_standard
+
+
+def test_cache_resident_ws_stays_standard():
+    # a 64 KiB working set lives in cache on zen4: private-tier stores
+    # never reach the allocate machinery, NT buys nothing
+    assert stores.select_store_flavor("zen4", ws_bytes=64e3) == "standard"
+
+
+def test_resolve_and_executed_flavor():
+    assert stores.resolve_flavor("nt") == "nt"
+    assert stores.resolve_flavor("standard", "zen4") == "standard"
+    assert stores.resolve_flavor("auto", "zen4", ws_bytes=BIG) == "nt"
+    with pytest.raises(ValueError):
+        stores.resolve_flavor("fast")
+    # explicit nt always executes; auto degrades to standard off-TPU
+    assert stores.executed_flavor("nt", "zen4") == "nt"
+    from repro.kernels import on_tpu
+    if not on_tpu():
+        assert stores.executed_flavor("auto", "zen4",
+                                      ws_bytes=BIG) == "standard"
+
+
+def test_selector_shares_ladder_pricing_with_wa():
+    # the plan's ratios ARE wa.ladder_traffic_ratio — never a fork
+    for name in ("zen4", "neoverse_v2", "golden_cove"):
+        plan = stores.plan_stores(name, ws_bytes=BIG)
+        assert plan.ratio_standard == pytest.approx(
+            wa.ladder_traffic_ratio(name, ws_bytes=BIG))
+        assert plan.ratio_nt == pytest.approx(
+            wa.ladder_traffic_ratio(name, nt_stores=True, ws_bytes=BIG))
+
+
+def test_priced_store_traffic_flavor_path():
+    prof = wa.store_profile((256, 512), "f32")
+    payload = 256 * 512 * 4.0
+    nt = wa.priced_store_traffic(prof, "zen4", ws_bytes=BIG, flavor="nt")
+    std = wa.priced_store_traffic(prof, "zen4", ws_bytes=BIG,
+                                  flavor="standard")
+    assert nt == pytest.approx(payload)
+    assert std == pytest.approx(2.0 * payload)
+    auto = wa.priced_store_traffic(prof, "zen4", ws_bytes=BIG,
+                                   flavor="auto")
+    assert auto == pytest.approx(nt)
+
+
+# --- NT vs standard interpret parity ---------------------------------------
+
+@pytest.mark.parametrize("shape", [(16, 256), (20, 300), (7, 100)])
+def test_stream_nt_parity(shape):
+    key = jax.random.PRNGKey(0)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, shape, jnp.float32)
+    b = jax.random.normal(kb, shape, jnp.float32)
+    np.testing.assert_allclose(K.copy_nt(a, interpret=True), R.copy(a),
+                               rtol=1e-6)
+    np.testing.assert_allclose(K.update_nt(a, interpret=True),
+                               R.update(a), rtol=1e-6)
+    np.testing.assert_allclose(K.stream_triad_nt(a, b, interpret=True),
+                               R.stream_triad(a, b), rtol=1e-6)
+    np.testing.assert_allclose(K.init_nt(shape, interpret=True),
+                               R.init(shape), rtol=1e-6)
+
+
+def test_ops_flavor_routing():
+    a = jnp.ones((16, 256), jnp.float32)
+    # forced nt runs the NT kernel (interpret off-TPU), same numbers
+    np.testing.assert_allclose(ops.copy(a, flavor="nt"),
+                               ops.copy(a), rtol=1e-6)
+    np.testing.assert_allclose(ops.update(a, flavor="nt"),
+                               ops.update(a), rtol=1e-6)
+    np.testing.assert_allclose(ops.stream_triad(a, a, flavor="nt"),
+                               ops.stream_triad(a, a), rtol=1e-6)
+    np.testing.assert_allclose(ops.init((16, 256), flavor="nt"),
+                               ops.init((16, 256)), rtol=1e-6)
+    # auto off-TPU stays on the standard execution path
+    np.testing.assert_allclose(ops.copy(a, flavor="auto"), a, rtol=1e-6)
+
+
+@pytest.mark.parametrize("sq", [1, 3])
+def test_kv_row_update_parity(sq):
+    key = jax.random.PRNGKey(1)
+    kc, ku = jax.random.split(key)
+    cache = jax.random.normal(kc, (2, 16, 4, 8), jnp.float32)
+    upd = jax.random.normal(ku, (2, sq, 4, 8), jnp.float32)
+    pos = jnp.array([3, 9], jnp.int32)
+    std = stores.kv_row_update(cache, upd, pos, flavor="standard")
+    nt = stores.kv_row_update(cache, upd, pos, flavor="nt")
+    np.testing.assert_allclose(np.asarray(std), np.asarray(nt), rtol=1e-6)
+    # rows outside the written window are untouched
+    np.testing.assert_array_equal(np.asarray(nt[0, :3]),
+                                  np.asarray(cache[0, :3]))
+    np.testing.assert_array_equal(np.asarray(nt[1, 9 + sq:]),
+                                  np.asarray(cache[1, 9 + sq:]))
+
+
+def test_kv_row_update_scalar_pos_parity():
+    cache = jnp.zeros((2, 8, 2, 4), jnp.float32)
+    upd = jnp.ones((2, 1, 2, 4), jnp.float32)
+    std = stores.kv_row_update(cache, upd, jnp.int32(5), flavor="standard")
+    nt = stores.kv_row_update(cache, upd, jnp.int32(5), flavor="nt")
+    np.testing.assert_array_equal(np.asarray(std), np.asarray(nt))
+    assert float(np.asarray(std)[0, 5].sum()) == 8.0
+
+
+def test_pad_to_horizon_parity():
+    x = jnp.full((2, 3, 2, 4), 7.0, jnp.bfloat16)
+    std = stores.pad_to_horizon(x, 10, flavor="standard")
+    nt = stores.pad_to_horizon(x, 10, flavor="nt")
+    assert std.shape == nt.shape == (2, 10, 2, 4)
+    np.testing.assert_array_equal(np.asarray(std, np.float32),
+                                  np.asarray(nt, np.float32))
+    # no-op when already at the horizon
+    assert stores.pad_to_horizon(x, 3, flavor="nt") is x
+
+
+# --- plan records carry the flavor -----------------------------------------
+
+def test_tile_plans_record_flavor():
+    tuning.clear_cache()
+    # a long DRAM-resident KV stream on zen4 selects nt...
+    big = tuning.flash_tiles("zen4", s=1 << 16, dh=128, h=32, hkv=8)
+    assert big.store_flavor == "nt"
+    # ...while grace keeps standard at any size
+    g = tuning.flash_tiles("neoverse_v2", s=1 << 16, dh=128, h=32, hkv=8)
+    assert g.store_flavor == "standard"
+    d = tuning.decode_tiles("zen4", skv=1 << 16, dh=128, h=32, hkv=8,
+                            batch=8)
+    assert d.store_flavor in ("standard", "nt")
+
+
+def test_chunk_plan_records_flavor():
+    from repro.serve.planner import clear_plan_cache, plan_chunk_size
+    clear_plan_cache()
+    cfg = get_smoke_config("yi-9b")
+    plan = plan_chunk_size(cfg, 2, 64, store_flavor="auto")
+    assert plan.store_flavor in ("standard", "nt")
+    assert plan.per_machine_flavor is not None
+    assert set(plan.per_machine_flavor) == set(plan.per_machine)
+    for flavor in plan.per_machine_flavor.values():
+        assert flavor in ("standard", "nt")
+    # an explicit flavor is honoured verbatim
+    forced = plan_chunk_size(cfg, 2, 64, store_flavor="nt")
+    assert forced.store_flavor == "nt"
+    assert all(f == "nt" for f in forced.per_machine_flavor.values())
+
+
+def test_kv_update_traffic_records_flavor():
+    from repro.serve.kv_traffic import kv_update_traffic
+    cfg = get_smoke_config("yi-9b")
+    # shapes big enough that the slot cache is DRAM-resident on zen4
+    rows = kv_update_traffic(cfg, 64, 1 << 15, flavor="auto",
+                             machines=("zen4", "neoverse_v2",
+                                       "golden_cove"))
+    by = {r["machine"]: r for r in rows}
+    assert by["zen4"]["store_flavor"] == "nt"
+    assert by["neoverse_v2"]["store_flavor"] == "standard"
+    assert by["golden_cove"]["store_flavor"] in ("standard", "nt")
+    # flavored pricing can only reduce zen4's donated traffic
+    legacy = {r["machine"]: r for r in kv_update_traffic(
+        cfg, 64, 1 << 15, machines=("zen4",))}
+    assert by["zen4"]["donated_bytes"] \
+        <= legacy["zen4"]["donated_bytes"] + 1e-9
+    assert legacy["zen4"]["store_flavor"] == "standard"
+    # a cache-resident working set correctly stays standard everywhere
+    small = kv_update_traffic(cfg, 1, 64, flavor="auto",
+                              machines=("zen4",))
+    assert small[0]["store_flavor"] == "standard"
+
+
+# --- forward-path threading -------------------------------------------------
+
+def test_forward_decode_flavor_token_identity():
+    cfg = get_smoke_config("yi-9b")
+    from repro.models import model as M
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache = M.init_cache(cfg, 2, 16)
+    tok = jnp.array([[3], [5]], jnp.int32)
+    pos = jnp.array([0, 0], jnp.int32)
+    lg_std, _, c_std = M.forward(cfg, params, {"tokens": tok},
+                                 mode="decode", cache=cache, pos=pos,
+                                 store_flavor="standard")
+    lg_nt, _, c_nt = M.forward(cfg, params, {"tokens": tok},
+                               mode="decode", cache=cache, pos=pos,
+                               store_flavor="nt")
+    np.testing.assert_allclose(np.asarray(lg_std), np.asarray(lg_nt),
+                               rtol=2e-5, atol=2e-5)
+    for a, b in zip(jax.tree.leaves(c_std), jax.tree.leaves(c_nt)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-5, atol=2e-5)
