@@ -242,3 +242,47 @@ def memory_seconds(machine, traffic_bytes: float,
         load_bytes=traffic_bytes * (1.0 - store_frac),
         store_bytes=traffic_bytes * store_frac,
         nt_stores=nt_stores, cores_active=cores_active, overlap=overlap)
+
+
+def page_gather_time(machine, *, n_pages: int, page_bytes: float,
+                     table_bytes: float = 0.0,
+                     ws_bytes: float | None = None,
+                     cores_active: int | None = None,
+                     overlap: str = "full") -> TierResolution:
+    """Tier-resolved seconds of a block-table page gather (pure reads).
+
+    ``n_pages`` live pages of ``page_bytes`` each, plus the block-table
+    entries themselves (``table_bytes`` — a few bytes per page, but a
+    *dependent* load the dense path never issues). The working set
+    defaults to the gathered bytes; pass the full pool size to price
+    the gather against where the pool actually lives
+    (repro.serve.kv_traffic does). No stores, so this leg carries no
+    write-allocate term on any machine — the WA story of paging is in
+    the stores it *avoids* (:func:`page_copy_time` prices the ones it
+    adds back: CoW).
+    """
+    load = n_pages * page_bytes + table_bytes
+    ws = load if ws_bytes is None else ws_bytes
+    return transfer_time(machine, ws_bytes=float(ws), load_bytes=load,
+                         store_bytes=0.0, cores_active=cores_active,
+                         overlap=overlap)
+
+
+def page_copy_time(machine, *, page_bytes: float, n_pages: int = 1,
+                   ws_bytes: float | None = None, nt_stores: bool = False,
+                   cores_active: int | None = None,
+                   overlap: str = "full") -> TierResolution:
+    """Tier-resolved seconds of a page-to-page copy (CoW fork).
+
+    Reads ``n_pages`` source pages and stores the same bytes to fresh
+    destination pages — the store side is WA-adjusted per leg exactly
+    like any other allocating store (``transfer_time``), which is what
+    makes CoW cost machine-dependent: a Zen 4 DRAM-resident copy pays
+    the write-allocate read of the destination, Grace's claim-based
+    mode does not.
+    """
+    b = n_pages * page_bytes
+    ws = 2.0 * b if ws_bytes is None else ws_bytes
+    return transfer_time(machine, ws_bytes=float(ws), load_bytes=b,
+                         store_bytes=b, nt_stores=nt_stores,
+                         cores_active=cores_active, overlap=overlap)

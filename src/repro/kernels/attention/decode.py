@@ -188,6 +188,111 @@ def flash_decode(q, k, v, pos, *, window: int | None = None,
     return combine_splits(o_part, m_part, l_part).astype(q.dtype)
 
 
+def _paged_decode_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_scr, m_scr, l_scr, **kw):
+    """Paged grid step: the block table is consumed by the BlockSpec
+    index maps (physical page -> KV block), so the kernel body is the
+    dense one verbatim — masking stays in *logical* coordinates."""
+    del bt_ref
+    _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_scr, m_scr, l_scr, **kw)
+
+
+def flash_decode_paged(q, k_pages, v_pages, block_tables, pos, *,
+                       window: int | None = None, n_splits: int = 1,
+                       interpret: bool = False) -> jax.Array:
+    """Split-KV flash decode against a paged KV pool (vLLM-style).
+
+    q: (B, Sq, H, Dh); ``k_pages``/``v_pages``: (P, page, Hkv, Dh)
+    physical page pools shared by every slot; ``block_tables``: (B, NB)
+    int32 mapping each slot's logical page ``i`` (cache rows
+    ``i*page .. (i+1)*page-1``) to a physical page. Both the block
+    table and ``pos`` are scalar-prefetched: the KV BlockSpec index
+    maps read the table, so each grid step DMAs exactly the physical
+    page its logical block lives in — the gather *is* the block
+    indexing, no materialized (B, NB*page, ...) cache ever exists.
+
+    The KV block equals the page size (one page per grid step) and the
+    block-level early-out is unchanged: it tests the *logical* block
+    start against ``pos``, so out-of-order physical tables cost
+    nothing. Entries beyond a slot's live pages may be arbitrary valid
+    page ids (they are fetched but fully masked). Returns
+    (B, Sq, H, Dh) in q's dtype.
+    """
+    b, sq, h, dh = q.shape
+    ps, hkv = k_pages.shape[1], k_pages.shape[2]
+    g = h // hkv
+    assert h == hkv * g and sq >= 1
+    nb = block_tables.shape[1]
+    n_splits = max(1, min(n_splits, nb))
+    bps = math.ceil(nb / n_splits)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    bt = jnp.clip(bt, 0, k_pages.shape[0] - 1)
+    if n_splits * bps > nb:
+        # pad the table to the split grid; padded blocks are logically
+        # past every pos (start >= nb*ps) so the early-out skips them
+        bt = jnp.pad(bt, [(0, 0), (0, n_splits * bps - nb)])
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, bk=ps, bps=bps, sq=sq, g=g, hkv=hkv,
+        scale=scale, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_splits, bps),
+        in_specs=[
+            pl.BlockSpec((1, sq, h, dh),
+                         lambda b_, s, ik, p, t: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, ps, hkv, dh),
+                         lambda b_, s, ik, p, t, n=bps:
+                         (t[b_, s * n + ik], 0, 0, 0)),
+            pl.BlockSpec((1, ps, hkv, dh),
+                         lambda b_, s, ik, p, t, n=bps:
+                         (t[b_, s * n + ik], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, sq, h, dh),
+                         lambda b_, s, ik, p, t: (s, b_, 0, 0, 0)),
+            pl.BlockSpec((1, 1, sq, h),
+                         lambda b_, s, ik, p, t: (s, b_, 0, 0)),
+            pl.BlockSpec((1, 1, sq, h),
+                         lambda b_, s, ik, p, t: (s, b_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hkv, sq * g, dh), jnp.float32),
+            pltpu.VMEM((hkv, sq * g), jnp.float32),
+            pltpu.VMEM((hkv, sq * g), jnp.float32),
+        ])
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_splits, b, sq, h, dh), jnp.float32),
+            jax.ShapeDtypeStruct((n_splits, b, sq, h), jnp.float32),
+            jax.ShapeDtypeStruct((n_splits, b, sq, h), jnp.float32),
+        ],
+        interpret=interpret)(pos_arr, bt, q, k_pages, v_pages)
+    return combine_splits(o_part, m_part, l_part).astype(q.dtype)
+
+
+def ref_decode_paged(q, k_pages, v_pages, block_tables, pos, *,
+                     window: int | None = None) -> jax.Array:
+    """Pure-JAX paged twin of :func:`flash_decode_paged` (off-TPU path).
+
+    Gathers each slot's pages in logical order and delegates to the
+    dense reference decode. Because every logical row keeps its
+    position, masked rows contribute exact zeros and the result is
+    identical to decoding the equivalent contiguous cache.
+    """
+    b = q.shape[0]
+    hkv, dh = k_pages.shape[2], k_pages.shape[3]
+    bt = jnp.asarray(block_tables, jnp.int32)
+    k = k_pages[bt].reshape(b, -1, hkv, dh)
+    v = v_pages[bt].reshape(b, -1, hkv, dh)
+    return ref_decode(q, k, v, pos, window=window)
+
+
 def combine_splits(o_part, m_part, l_part) -> jax.Array:
     """Merge per-split partial softmax states (flash-decoding combine).
 

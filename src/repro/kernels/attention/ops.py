@@ -95,3 +95,42 @@ def flash_decode(q, k, v, pos, *, window=None, impl="auto", bk=None,
                               n_splits=n_splits,
                               interpret=interpret_mode())
     return D.ref_decode(q, k, v, pos, window=window)
+
+
+def flash_decode_paged(q, k_pages, v_pages, block_tables, pos, *,
+                       window=None, impl="auto", n_splits=None,
+                       kv_len=None, machine=None):
+    """Paged split-KV decode against a shared page pool, impl-routed.
+
+    q: (B, Sq, H, Dh); ``k_pages``/``v_pages``: (P, page, Hkv, Dh);
+    ``block_tables``: (B, NB) int32 (see
+    ``kernels.attention.decode.flash_decode_paged``). ``kv_len`` bounds
+    occupancy at *page* granularity: only the first
+    ``ceil(kv_len / page)`` table columns are ever gathered — the
+    paged analogue of the dense router's block rounding. The KV block
+    is pinned to the page size (a page is the DMA unit), so only
+    ``n_splits`` is autotuned; ``machine`` picks whose ladder tunes it.
+
+    Routing matches :func:`flash_decode`: ``pallas`` runs the
+    scalar-prefetched gather kernel (interpret mode off-TPU);
+    ``ref``/``auto``-off-TPU gather pages in logical order and run the
+    dense oracle. Call under an enclosing ``jax.jit``.
+    """
+    b, sq, h, dh = q.shape
+    ps, hkv = k_pages.shape[1], k_pages.shape[2]
+    nb = block_tables.shape[1]
+    if kv_len is not None:
+        nb_used = max(1, min(math.ceil(int(kv_len) / ps), nb))
+        block_tables = block_tables[:, :nb_used]
+        nb = nb_used
+    if use_pallas(impl):
+        if n_splits is None:
+            plan = tuning.decode_tiles(machine or tuning.default_machine(),
+                                       skv=nb * ps, dh=dh, h=h, hkv=hkv,
+                                       batch=b, dtype=str(q.dtype))
+            n_splits = plan.n_splits
+        return D.flash_decode_paged(q, k_pages, v_pages, block_tables,
+                                    pos, window=window, n_splits=n_splits,
+                                    interpret=interpret_mode())
+    return D.ref_decode_paged(q, k_pages, v_pages, block_tables, pos,
+                              window=window)

@@ -388,7 +388,7 @@ def _project(x, w, b=None):
 def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
                 positions, cache, pos, cache_len: int | None = None,
                 attn_impl: str | None = None, kv_len: int | None = None,
-                store_flavor: str | None = None):
+                store_flavor: str | None = None, block_tables=None):
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_eff
     q = _project(x, p["wq"], p.get("bq"))
@@ -407,7 +407,27 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
 
     new_cache = None
     flav = store_flavor or "standard"
-    if mode == "decode":
+    if mode == "decode" and block_tables is not None:
+        # paged cache: leaves are physical page pools (P, page, Hkv, Dh)
+        # shared across slots; scatter each slot's new row into the
+        # physical page its block table names for the current logical
+        # page. The engine guarantees every page in a chunk's write
+        # range is allocated and exclusively held (CoW already done),
+        # so the in-place scatter can never touch a shared page.
+        ps = cache["k"].shape[1]
+        nb = block_tables.shape[1]
+        p1 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        lp = jnp.minimum(p1 // ps, nb - 1)    # overshoot-retiring clamp
+        phys = block_tables[jnp.arange(b), lp]
+        row = p1 % ps
+        kc = cache["k"].at[phys, row].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[phys, row].set(v[:, 0].astype(cache["v"].dtype))
+        y = attn_lib.decode_attention(q, kc, vc, pos, window=window,
+                                      impl=attn_impl or "ref",
+                                      kv_len=kv_len,
+                                      block_tables=block_tables)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "decode":
         # the in-place KV row writes route through the store-flavor door
         # (repro.kernels.stores): standard = the historical dus paths,
         # nt = the cache-aliased full-tile Pallas writer
@@ -465,7 +485,7 @@ def _slstm_mixer(cfg, p, x, *, mode, cache):
 def apply_block(cfg: ModelConfig, blk: str, p: dict, x, *, mode: str,
                 positions, cache, pos, cache_len: int | None = None,
                 attn_impl: str | None = None, kv_len: int | None = None,
-                store_flavor: str | None = None):
+                store_flavor: str | None = None, block_tables=None):
     """Returns (x_out, aux_loss, new_cache)."""
     mixer, ffn = blk.split(":")
     hx = L.rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -475,7 +495,8 @@ def apply_block(cfg: ModelConfig, blk: str, p: dict, x, *, mode: str,
                                    mode=mode, positions=positions,
                                    cache=cache, pos=pos, cache_len=cache_len,
                                    attn_impl=attn_impl, kv_len=kv_len,
-                                   store_flavor=store_flavor)
+                                   store_flavor=store_flavor,
+                                   block_tables=block_tables)
     elif mixer == "mamba":
         y, new_cache = _mamba_mixer(cfg, p["mixer"], hx, mode=mode,
                                     cache=cache)
@@ -518,7 +539,7 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
             mode: str = "train",
             cache: dict | None = None, pos=None, cache_len: int | None = None,
             attn_impl: str | None = None, kv_len: int | None = None,
-            store_flavor: str | None = None):
+            store_flavor: str | None = None, block_tables=None):
     """Run the model.
 
     batch: {"tokens": (B,S) int32} or {"embeds": (B,S,d)}; optional
@@ -538,6 +559,9 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
     `store_flavor` ("standard"|"nt"|"auto", None = standard) picks the
     KV-writer store path (repro.kernels.stores): how decode rows are
     written into the cache and how prefill pads to the horizon.
+    `block_tables` ((B, NB) int32, decode only) switches attention KV
+    leaves to the paged layout: caches are physical page pools and each
+    row's logical pages map through its table row (repro.serve.pages).
     Returns logits (B, S, V) plus aux-loss scalar as (logits, aux[, cache]).
     """
     if cfg.embed_inputs:
@@ -586,7 +610,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
                                        cache=c_r[str(j)], pos=pos,
                                        cache_len=cache_len,
                                        attn_impl=attn_impl, kv_len=kv_len,
-                                       store_flavor=store_flavor)
+                                       store_flavor=store_flavor,
+                                       block_tables=block_tables)
                 aux_total = aux_total + a
                 new_slices[str(j)] = nc
             new_slices_all.append(new_slices)
@@ -606,7 +631,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
                                        cache=cj, pos=pos,
                                        cache_len=cache_len,
                                        attn_impl=attn_impl, kv_len=kv_len,
-                                       store_flavor=store_flavor)
+                                       store_flavor=store_flavor,
+                                       block_tables=block_tables)
                 aux = aux + a
                 if nc is not None:
                     new_slices[str(j)] = nc
@@ -631,7 +657,8 @@ def forward(cfg: ModelConfig, params: dict, batch: dict, *,
                                mode=mode, positions=positions,
                                cache=ci, pos=pos, cache_len=cache_len,
                                attn_impl=attn_impl, kv_len=kv_len,
-                               store_flavor=store_flavor)
+                               store_flavor=store_flavor,
+                               block_tables=block_tables)
         aux_total = aux_total + a
         if nc is not None and mode in ("prefill", "decode"):
             new_cache["tail"][str(i)] = nc

@@ -9,28 +9,46 @@ with per-slot positions and in-graph temperature sampling, and retired
 as they finish — new requests join mid-flight without disturbing the
 streams already decoding.
 
+``PagedServeEngine`` swaps the dense slot stripes for a paged KV cache
+(``repro.serve.pages``): fixed-size physical pages mapped through
+per-slot block tables, refcounted prefix sharing with copy-on-write,
+lazy allocation as positions advance, and zero-fill-free page
+recycling — memory scales with live tokens instead of
+``slots x horizon``, and the avoided admission stores are the serve
+path's write-allocate-evasion story.
+
 The analytical stack is wired in: the scheduler picks its decode chunk
 size from the port model's tier-resolved per-step cost
 (``repro.serve.planner``, via ``portmodel.compare`` /
-``Report.tier_bound_seconds``), and the per-step KV-update traffic is
-priced through ``wa.store_profile`` so the donation-vs-copy delta is
-reported per machine (``repro.serve.kv_traffic``).
+``Report.tier_bound_seconds``), and the per-step KV traffic — dense
+updates, paged gathers, CoW copies, recycled admissions — is priced
+through ``wa``/``memtier`` so every delta is reported per machine
+(``repro.serve.kv_traffic``).
 """
 
 from repro.serve.decode import make_chunked_decode_step
-from repro.serve.engine import Request, ServeEngine
-from repro.serve.kv_traffic import decode_read_traffic, kv_update_traffic
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.kv_traffic import (cow_fork_traffic, decode_read_traffic,
+                                    kv_update_traffic,
+                                    page_admission_traffic,
+                                    page_gather_traffic)
+from repro.serve.pages import PagePool
 from repro.serve.planner import (ChunkPlan, decode_step_hlo,
                                  kv_read_seconds, plan_chunk_size)
 
 __all__ = [
     "ChunkPlan",
+    "PagePool",
+    "PagedServeEngine",
     "Request",
     "ServeEngine",
+    "cow_fork_traffic",
     "decode_read_traffic",
     "decode_step_hlo",
     "kv_read_seconds",
     "kv_update_traffic",
     "make_chunked_decode_step",
+    "page_admission_traffic",
+    "page_gather_traffic",
     "plan_chunk_size",
 ]

@@ -23,7 +23,8 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
                              temperature: float = 0.0,
                              attn_impl: str | None = None,
                              kv_len: int | None = None,
-                             store_flavor: str | None = None):
+                             store_flavor: str | None = None,
+                             paged: bool = False):
     """Build the n-token decode chunk: one dispatch, n in-graph steps.
 
     Returns ``step(params, cache, tokens, pos, key) -> (toks, cache, pos)``
@@ -41,18 +42,26 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
     ``kv_len`` cache rows instead of the full horizon — the split-KV
     traffic bound at dispatch granularity. ``store_flavor`` picks the
     KV-writer store path (repro.kernels.stores; None = standard).
+
+    ``paged=True`` switches to the paged-cache step signature
+    ``step(params, cache, block_tables, tokens, pos, key)``: attention
+    KV leaves are physical page pools and ``block_tables`` (B, NB)
+    int32 maps each slot's logical pages (repro.serve.pages). The
+    cache stays positional argument 1 so the engine's donation hint is
+    layout-independent.
     """
     assert cfg.embed_inputs, "chunked decode needs a token embedding"
     assert n_tokens >= 1
 
-    def step(params, cache, tokens, pos, key):
+    def step(params, cache, tokens, pos, key, block_tables=None):
         def body(carry, _):
             cache, tok, pos, key = carry
             logits, _, new_cache = M.forward(cfg, params, {"tokens": tok},
                                             mode="decode", cache=cache,
                                             pos=pos, attn_impl=attn_impl,
                                             kv_len=kv_len,
-                                            store_flavor=store_flavor)
+                                            store_flavor=store_flavor,
+                                            block_tables=block_tables)
             # some mixers emit recurrent state in compute dtype (bf16);
             # the cache contract (model.cache_shapes) carries them f32 —
             # pin the scan carry to the contract's dtypes
@@ -71,4 +80,11 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
             body, (cache, tokens, pos, key), None, length=n_tokens)
         return jnp.swapaxes(toks, 0, 1), cache, pos
 
-    return step
+    if not paged:
+        return step
+
+    def paged_step(params, cache, block_tables, tokens, pos, key):
+        return step(params, cache, tokens, pos, key,
+                    block_tables=block_tables)
+
+    return paged_step

@@ -9,10 +9,25 @@ budget is spent it retires and the slot is free for the next admission;
 the big slot cache is never reallocated, regrown, or recompiled as the
 batch composition changes.
 
+Two cache layouts share the engine skeleton:
+
+- :class:`ServeEngine` — dense per-slot KV: every slot owns a
+  ``max_len`` stripe of the cache, zero-filled to the horizon at
+  admission regardless of how much of it the request will use.
+- :class:`PagedServeEngine` — paged KV (repro.serve.pages): attention
+  KV lives in fixed-size physical pages mapped through per-slot block
+  tables. Pages are allocated lazily as positions advance, identical
+  prompt prefixes share pages by refcount (copy-on-write on first
+  divergent write), and retiring a request returns its pages without
+  any zero-fill — recycled pages keep stale rows, masked by position,
+  which is the serve-scale write-allocate-evasion story (DESIGN.md).
+
 Numerical caveat: slots are independent streams for every per-row mixer
 (attention, mamba, xLSTM). MoE blocks with finite capacity couple rows
 through expert capacity — serve MoE configs with a generous
-``capacity_factor`` if bit-exact per-request streams matter.
+``capacity_factor`` if bit-exact per-request streams matter (and note
+prefix sharing reuses KV computed in a *different* prefill batch, so
+shared-prefix determinism also assumes dense FFNs).
 """
 
 from __future__ import annotations
@@ -26,6 +41,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.serve import pages as pages_lib
 from repro.serve.decode import make_chunked_decode_step
 from repro.serve.planner import plan_chunk_size
 from repro.serve.slots import make_insert_step
@@ -57,7 +73,15 @@ class ServeEngine:
     length (jit's own shape-keyed cache); decode and slot-insert compile
     exactly once. ``run(requests)`` drives admit -> decode-chunk -> retire
     rounds until every request has its tokens.
+
+    Subclass hooks (`PagedServeEngine` overrides all five): `_make_plan`
+    prices the chunk, `_build_state` allocates the cache and jits the
+    dispatch steps, `_insert_prefilled` lands one prefilled request in a
+    slot, `_pre_dispatch` runs host-side bookkeeping before each chunk,
+    `_dispatch` issues it, `_release_slot` retires a slot.
     """
+
+    paged = False
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_len: int, chunk: int | None = None,
@@ -82,30 +106,60 @@ class ServeEngine:
         # TPU, so off-TPU serving keeps the standard XLA path.
         self.store_flavor = store_flavor
         if chunk is None:
-            self.plan = plan_chunk_size(cfg, max_slots, max_len,
-                                        machine=machine, occupancy=kv_len,
-                                        store_flavor=store_flavor)
+            self.plan = self._make_plan(machine)
             chunk = self.plan.chunk
         else:
             self.plan = None     # explicit chunk: no analytic plan made
         self.chunk = max(1, int(chunk))
-        self.cache = M.init_cache(cfg, max_slots, max_len)
-        self._decode = jax.jit(
-            make_chunked_decode_step(cfg, self.chunk, self.temperature,
-                                     attn_impl=attn_impl, kv_len=kv_len,
-                                     store_flavor=store_flavor),
-            donate_argnums=(1,))
-        self._insert = jax.jit(make_insert_step(cfg), donate_argnums=(0,))
-        # jit retraces per prompt length/batch shape on its own — one
-        # wrapper serves every admission path
-        self._prefill = jax.jit(serve_lib.make_prefill_step(
-            cfg, cache_len=max_len, store_flavor=store_flavor))
+        self._build_state()
         self._key = jax.random.PRNGKey(seed)
         self.slots: list = [None] * max_slots
         self._tok = np.zeros((max_slots, 1), np.int32)
         self._pos = np.zeros((max_slots,), np.int32)
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
+
+    # -- layout hooks -------------------------------------------------------
+    def _make_plan(self, machine):
+        """Analytic chunk plan for this cache layout."""
+        return plan_chunk_size(self.cfg, self.max_slots, self.max_len,
+                               machine=machine, occupancy=self.kv_len,
+                               store_flavor=self.store_flavor)
+
+    def _build_state(self):
+        """Allocate the cache and jit the per-layout dispatch steps."""
+        self.cache = M.init_cache(self.cfg, self.max_slots, self.max_len)
+        self._decode = jax.jit(
+            make_chunked_decode_step(self.cfg, self.chunk, self.temperature,
+                                     attn_impl=self.attn_impl,
+                                     kv_len=self.kv_len,
+                                     store_flavor=self.store_flavor),
+            donate_argnums=(1,))
+        self._insert = jax.jit(make_insert_step(self.cfg),
+                               donate_argnums=(0,))
+        # jit retraces per prompt length/batch shape on its own — one
+        # wrapper serves every admission path
+        self._prefill = jax.jit(serve_lib.make_prefill_step(
+            self.cfg, cache_len=self.max_len,
+            store_flavor=self.store_flavor))
+
+    def _insert_prefilled(self, slot: int, one, prompt) -> None:
+        """Land one prefilled (batch-1) request cache in ``slot``."""
+        self.cache = self._insert(self.cache, one, jnp.int32(slot))
+
+    def _release_slot(self, i: int) -> None:
+        """Retire slot ``i`` and free whatever it held."""
+        self.slots[i] = None
+
+    def _pre_dispatch(self) -> None:
+        """Host-side bookkeeping before a chunk (no-op for dense slots)."""
+
+    def _dispatch(self, sub):
+        """Issue one chunked decode over all slots; returns (B, chunk)."""
+        toks, self.cache, _ = self._decode(
+            self.params, self.cache, jnp.asarray(self._tok),
+            jnp.asarray(self._pos), sub)
+        return toks
 
     # -- admission ----------------------------------------------------------
     def free_slots(self) -> list:
@@ -149,7 +203,7 @@ class ServeEngine:
         logits, one = self._prefill(self.params, {"tokens": prompt[None, :]})
         self.prefill_dispatches += 1
         tok0 = int(self._sample_first(logits[:, -1])[0])
-        self.cache = self._insert(self.cache, one, jnp.int32(slot))
+        self._insert_prefilled(slot, one, tuple(int(t) for t in prompt))
         self.slots[slot] = _Slot(rid=req.rid, remaining=req.max_new_tokens - 1,
                                  out=[tok0])
         self._tok[slot, 0] = tok0
@@ -160,11 +214,13 @@ class ServeEngine:
         """Admit a full batch at once (all slots free, equal prompt lens).
 
         One batched prefill builds the whole slot cache directly — the
-        fast path for the launch driver's fixed-shape batch. Falls back
-        to per-request admission otherwise.
+        fast path for the launch driver's fixed-shape batch. Paged
+        engines always take the per-request path (admission is where
+        prefix matching happens). Falls back to per-request admission
+        otherwise.
         """
         lens = {len(r.prompt) for r in reqs}
-        if (len(reqs) != self.max_slots or len(lens) != 1
+        if (self.paged or len(reqs) != self.max_slots or len(lens) != 1
                 or any(s is not None for s in self.slots)):
             for r in reqs:
                 self.admit(r)
@@ -182,6 +238,20 @@ class ServeEngine:
             self._tok[i, 0] = tok0[i]
             self._pos[i] = s
 
+    def cancel(self, rid: str):
+        """Abort an active request; returns its tokens so far, or None.
+
+        On the paged engine this is the page-recycling fast path: the
+        request's pages go straight back to the pool (no zero-fill, no
+        cache traffic at all) and the next admission may recycle them.
+        """
+        for i, st in enumerate(self.slots):
+            if st is not None and st.rid == rid:
+                out = np.asarray(st.out, np.int32)
+                self._release_slot(i)
+                return out
+        return None
+
     # -- decode -------------------------------------------------------------
     def step(self) -> list:
         """One decode round: a single chunked dispatch over all slots.
@@ -193,13 +263,12 @@ class ServeEngine:
             if st is not None and st.remaining <= 0:   # 1-token budgets:
                 # the prefill already yielded their only token
                 retired.append((st.rid, np.asarray(st.out, np.int32)))
-                self.slots[i] = None
+                self._release_slot(i)
         if all(s is None for s in self.slots):
             return retired
+        self._pre_dispatch()
         self._key, sub = jax.random.split(self._key)
-        toks, self.cache, _ = self._decode(
-            self.params, self.cache, jnp.asarray(self._tok),
-            jnp.asarray(self._pos), sub)
+        toks = self._dispatch(sub)
         self.decode_dispatches += 1
         toks = np.asarray(toks)
         for i, st in enumerate(self.slots):
@@ -212,7 +281,7 @@ class ServeEngine:
             self._pos[i] += self.chunk
             if st.remaining <= 0:
                 retired.append((st.rid, np.asarray(st.out, np.int32)))
-                self.slots[i] = None
+                self._release_slot(i)
         return retired
 
     def run(self, requests: list) -> dict:
@@ -235,3 +304,181 @@ class ServeEngine:
             for rid, toks in self.step():
                 results[rid] = toks
         return results
+
+
+class PagedServeEngine(ServeEngine):
+    """Paged-KV serve engine: block tables, prefix sharing, CoW forks.
+
+    Attention KV leaves are physical page pools of ``n_pages + 1`` pages
+    of ``page_size`` rows (the extra page is a write-off scratch page:
+    unmapped table entries point at it, so stale rows of free slots and
+    the overshoot writes of retiring slots land somewhere harmless and
+    position-masked). Per-slot block tables live on the host
+    (``block_tables``, -1 = unmapped) and are re-shipped each dispatch —
+    a few KiB against the MiB-scale KV traffic they steer.
+
+    What the dense engine zero-fills eagerly, this engine allocates
+    lazily: pages appear only when a slot's position advances into them
+    (`_pre_dispatch`), admissions map shared prompt prefixes instead of
+    copying them (``share_prefixes``), `fork` clones a stream for the
+    cost of its recurrent state plus refcounts, and retirement returns
+    pages with their stale contents intact — recycling skips the
+    zero-fill a dense admission would pay, which is exactly the
+    write-allocate traffic the MemTier pricing in
+    ``serve.kv_traffic`` charges for.
+    """
+
+    paged = True
+
+    def __init__(self, cfg: ModelConfig, params, *, page_size: int = 8,
+                 n_pages: int | None = None, share_prefixes: bool = True,
+                 **kw):
+        self.page_size = int(page_size)
+        self.pages_per_slot = pages_lib.pages_per_slot(
+            kw["max_len"], self.page_size)
+        # dense-equivalent capacity by default: sharing and laziness can
+        # only ever need fewer pages than one-stripe-per-slot
+        self.n_pages = int(n_pages) if n_pages is not None \
+            else kw["max_slots"] * self.pages_per_slot
+        self.share_prefixes = bool(share_prefixes)
+        super().__init__(cfg, params, **kw)
+
+    # -- layout hooks -------------------------------------------------------
+    def _make_plan(self, machine):
+        return plan_chunk_size(self.cfg, self.max_slots, self.max_len,
+                               machine=machine, occupancy=self.kv_len,
+                               store_flavor=self.store_flavor,
+                               page_size=self.page_size)
+
+    def _build_state(self):
+        cfg, ps = self.cfg, self.page_size
+        self.pool = pages_lib.PagePool(self.n_pages, ps)
+        self._scratch = self.n_pages          # physical index of scratch
+        self.cache = pages_lib.init_paged_cache(
+            cfg, self.max_slots, self.n_pages + 1, ps)
+        self.block_tables = np.full(
+            (self.max_slots, self.pages_per_slot), -1, np.int32)
+        self._decode = jax.jit(
+            make_chunked_decode_step(cfg, self.chunk, self.temperature,
+                                     attn_impl=self.attn_impl,
+                                     kv_len=self.kv_len,
+                                     store_flavor=self.store_flavor,
+                                     paged=True),
+            donate_argnums=(1,))
+        self._page_insert = jax.jit(
+            pages_lib.make_paged_insert_step(cfg, ps), donate_argnums=(0,))
+        self._page_copy = jax.jit(
+            pages_lib.make_page_copy_step(cfg), donate_argnums=(0,))
+        self._slot_copy = jax.jit(
+            pages_lib.make_slot_copy_step(cfg), donate_argnums=(0,))
+        # prefill at *exactly* the prompt length: no horizon zero-fill —
+        # fresh pages get real rows, recycled pages keep stale ones
+        self._prefill = jax.jit(serve_lib.make_prefill_step(
+            cfg, cache_len=None, store_flavor=self.store_flavor))
+        self.gather_pages = 0                 # live pages read, summed
+                                              # over dispatches (fig8)
+
+    def _insert_prefilled(self, slot: int, one, prompt) -> None:
+        ps = self.page_size
+        s = len(prompt)
+        npg = -(-s // ps)
+        shared = self.pool.match_prefix(prompt) if self.share_prefixes \
+            else []
+        fresh = self.pool.allocate(npg - len(shared))
+        held = list(shared) + list(fresh)
+        if self.share_prefixes:
+            # full prompt pages become matchable by later admissions
+            self.pool.register_prefix(prompt, held[:s // ps])
+        self.block_tables[slot, :] = -1
+        self.block_tables[slot, :npg] = held
+        # always dispatched: recurrent leaves need their slot row even
+        # when every KV page of the prompt is shared (zero page copies)
+        self.cache = self._page_insert(
+            self.cache, one, jnp.int32(slot),
+            jnp.asarray(np.asarray(fresh, np.int32)),
+            jnp.arange(len(shared), npg, dtype=jnp.int32))
+
+    def _release_slot(self, i: int) -> None:
+        held = [int(p) for p in self.block_tables[i] if p >= 0]
+        self.pool.release(held)
+        self.block_tables[i, :] = -1
+        self.slots[i] = None
+
+    def _pre_dispatch(self) -> None:
+        """Make every page the coming chunk will write exist and be ours.
+
+        For each active slot: allocate the pages its next
+        ``min(chunk, remaining)`` positions will touch, and
+        copy-on-write any that are shared (prefix index, forks). After
+        this, the in-graph scatter can never land on a page another
+        holder can see. Overshoot writes past ``remaining`` hit either
+        an exclusively-held page (rows masked after retirement) or the
+        scratch page — never an allocated shared one.
+        """
+        ps, pps = self.page_size, self.pages_per_slot
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            p0 = int(self._pos[i])
+            take = min(self.chunk, st.remaining)
+            l_lo = min(p0 // ps, pps - 1)
+            l_hi = min((p0 + take - 1) // ps, pps - 1)
+            for lg in range(l_lo, l_hi + 1):
+                phys = int(self.block_tables[i, lg])
+                if phys < 0:
+                    self.block_tables[i, lg] = self.pool.allocate(1)[0]
+                    continue
+                page, copied = self.pool.prepare_write(phys)
+                if copied:
+                    self.cache = self._page_copy(
+                        self.cache, jnp.int32(phys), jnp.int32(page))
+                self.block_tables[i, lg] = page
+        live = self.block_tables[[i for i, st in enumerate(self.slots)
+                                  if st is not None]]
+        self.gather_pages += int((live >= 0).sum())
+
+    def _dispatch(self, sub):
+        bt = np.where(self.block_tables < 0, self._scratch,
+                      self.block_tables).astype(np.int32)
+        toks, self.cache, _ = self._decode(
+            self.params, self.cache, jnp.asarray(bt),
+            jnp.asarray(self._tok), jnp.asarray(self._pos), sub)
+        return toks
+
+    # -- paged-only surface -------------------------------------------------
+    def fork(self, rid: str, new_rid: str,
+             max_new_tokens: int | None = None) -> int:
+        """Clone an active stream into a free slot, copy-on-write.
+
+        The clone maps the same physical pages (refcounted); only the
+        slot-batched recurrent state (mamba/xLSTM) is copied on device.
+        Divergent writes trigger per-page CoW at the next
+        `_pre_dispatch`. Returns the clone's slot index.
+        """
+        src = next((i for i, st in enumerate(self.slots)
+                    if st is not None and st.rid == rid), None)
+        if src is None:
+            raise KeyError(f"no active request {rid!r}")
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot")
+        dst = free[0]
+        self.pool.fork([int(p) for p in self.block_tables[src] if p >= 0])
+        self.block_tables[dst] = self.block_tables[src]
+        self.cache = self._slot_copy(self.cache, jnp.int32(src),
+                                     jnp.int32(dst))
+        st = self.slots[src]
+        self.slots[dst] = _Slot(
+            rid=new_rid,
+            remaining=st.remaining if max_new_tokens is None
+            else max_new_tokens,
+            out=list(st.out))
+        self._tok[dst] = self._tok[src]
+        self._pos[dst] = self._pos[src]
+        return dst
+
+    def check_pool(self) -> None:
+        """Assert page-conservation invariants over the live block tables."""
+        self.pool.check_conservation(
+            [[int(p) for p in self.block_tables[i] if p >= 0]
+             for i, st in enumerate(self.slots) if st is not None])

@@ -15,6 +15,14 @@ path's WA story in bytes.
 dense full-horizon KV streaming vs the split-KV kernel's
 occupancy-bounded blocks, per machine (each machine's autotuned KV
 block sets its rounding).
+
+The paged-KV engine (repro.serve.pages / PagedServeEngine) adds three
+traffic classes of its own, all priced through the same MemTier
+ladder so the fig8 gates compare like with like:
+:func:`page_gather_traffic` (block-table gather reads + the WA-priced
+row store of the step), :func:`cow_fork_traffic` (the page copies
+copy-on-write adds back), and :func:`page_admission_traffic`
+(recycled-page admission vs the dense engine's horizon zero-fill).
 """
 
 from __future__ import annotations
@@ -173,4 +181,154 @@ def kv_update_traffic(cfg: ModelConfig, batch: int, max_len: int, *,
         })
     if not math.isfinite(sum(r["delta_bytes"] for r in rows)):
         raise AssertionError("non-finite KV traffic pricing")
+    return rows
+
+
+# --- paged-KV traffic classes (repro.serve.pages) -------------------------
+
+def page_bytes(cfg: ModelConfig, page_size: int) -> float:
+    """Bytes one physical page holds across the stack (K and V, every
+    attention layer, one slot's worth of rows)."""
+    return kv_row_bytes(cfg, 1) * page_size
+
+
+def page_gather_traffic(cfg: ModelConfig, batch: int, max_len: int,
+                        occupancy: int, page_size: int, *,
+                        machines=None, flavor: str = "auto") -> list:
+    """Per-machine decode traffic of the paged engine, per step.
+
+    Read side: only the ``ceil(occupancy / page)`` *live* pages of each
+    slot are gathered (the block-table clamp in
+    ``ops.flash_decode_paged``), plus the table entries themselves —
+    one int32 per live page per layer per K/V leaf, the dependent load
+    the dense path never issues. The gather is pure loads, so it is
+    machine-invariant in bytes; the machine ordering of the total rides
+    on the store side — the step's KV row writes, WA-priced against the
+    page-pool working set exactly like :func:`kv_update_traffic` prices
+    the dense ones. ``read_ratio`` compares against the dense
+    full-horizon stream (> 1 whenever slots are not full).
+
+    Rows also carry ``gather_seconds``: the ladder-resolved time of the
+    gather (``memtier.page_gather_time``) with the pool as working set.
+    """
+    from repro.core import memtier
+    from repro.serve.pages import pages_per_slot
+
+    occupancy = max(1, min(int(occupancy), max_len))
+    ps = int(page_size)
+    pps = pages_per_slot(max_len, ps)
+    live = min(math.ceil(occupancy / ps), pps)
+    row = kv_row_bytes(cfg, batch)
+    gather = kv_row_bytes(cfg, 1) * live * ps * batch
+    n_attn = attn_layer_count(cfg)
+    table = 2.0 * n_attn * batch * live * 4.0      # int32 entries, K and V
+    dense = row * max_len
+    profs = decode_kv_profiles(cfg, batch, pps * ps)
+    rows = []
+    for name in (machines if machines is not None else registered_names()):
+        m = get_machine(name)
+        store = wa.priced_store_traffic(
+            profs["donated"], m, ws_bytes=profs["cache_bytes"],
+            cores_active=m.cores, flavor=flavor)
+        res = memtier.page_gather_time(
+            m, n_pages=live * batch, page_bytes=page_bytes(cfg, ps),
+            table_bytes=table, ws_bytes=profs["cache_bytes"],
+            cores_active=m.cores)
+        rows.append({
+            "machine": m.name, "page_size": ps, "live_pages": live,
+            "occupancy": occupancy, "max_len": max_len,
+            "gather_read_bytes": gather, "table_read_bytes": table,
+            "store_bytes": store,
+            "total_bytes": gather + table + store,
+            "dense_read_bytes": dense,
+            "read_ratio": dense / (gather + table),
+            "gather_seconds": res.seconds,
+            "n_attn_layers": n_attn,
+        })
+    if not all(math.isfinite(r["total_bytes"]) for r in rows):
+        raise AssertionError("non-finite page-gather pricing")
+    return rows
+
+
+def cow_fork_traffic(cfg: ModelConfig, page_size: int, *,
+                     n_copies: int = 1, machines=None,
+                     flavor: str = "auto") -> list:
+    """Per-machine cost of ``n_copies`` copy-on-write page copies.
+
+    A CoW copy reads the shared page and stores a fresh one — the store
+    is an allocating streaming write, so it carries each machine's WA
+    ratio (Zen 4 pays the destination read, Grace's claim mode does
+    not). Rows carry both the WA-priced bytes and the ladder-resolved
+    seconds (``memtier.page_copy_time``).
+    """
+    from repro.core import memtier
+
+    pb = page_bytes(cfg, int(page_size))
+    read = pb * n_copies
+    prof = wa.StoreProfile(stored_bytes=pb * n_copies, rmw_read_bytes=0.0)
+    rows = []
+    for name in (machines if machines is not None else registered_names()):
+        m = get_machine(name)
+        store = wa.priced_store_traffic(prof, m, ws_bytes=2.0 * pb,
+                                        cores_active=m.cores, flavor=flavor)
+        res = memtier.page_copy_time(m, page_bytes=pb, n_pages=n_copies,
+                                     cores_active=m.cores)
+        rows.append({
+            "machine": m.name, "page_size": int(page_size),
+            "n_copies": int(n_copies), "page_bytes": pb,
+            "read_bytes": read, "store_bytes": store,
+            "total_bytes": read + store,
+            "copy_seconds": res.seconds,
+        })
+    if not all(math.isfinite(r["total_bytes"]) for r in rows):
+        raise AssertionError("non-finite CoW pricing")
+    return rows
+
+
+def page_admission_traffic(cfg: ModelConfig, prompt_len: int, max_len: int,
+                           page_size: int, *, shared_pages: int = 0,
+                           machines=None, flavor: str = "auto") -> list:
+    """Per-machine admission stores: paged recycling vs dense zero-fill.
+
+    A dense admission stores the *whole horizon*: prompt rows plus a
+    zero-fill out to ``max_len`` (``make_prefill_step``'s in-graph
+    ``pad_to_horizon``). A paged admission stores only the prompt's
+    unshared pages — a recycled page is overwritten in place with no
+    zero-fill at all (stale rows are masked by position), and a fresh
+    page additionally pays its share of the pool's one-time zero init.
+    All three are WA-priced as streaming stores against the same
+    horizon-sized working set. ``recycled_bytes`` is strictly below
+    ``zero_fill_bytes`` on every machine whenever the prompt's pages
+    cover less than the horizon — the admission-side WA gate fig8
+    asserts.
+    """
+    ps = int(page_size)
+    npg = math.ceil(max(1, int(prompt_len)) / ps)
+    shared = max(0, min(int(shared_pages), npg))
+    row1 = kv_row_bytes(cfg, 1)
+    ws = row1 * max_len
+    prof_zero = wa.StoreProfile(stored_bytes=row1 * max_len,
+                                rmw_read_bytes=0.0)
+    payload = row1 * (npg - shared) * ps
+    prof_recycled = wa.StoreProfile(stored_bytes=payload,
+                                    rmw_read_bytes=0.0)
+    prof_fresh = wa.StoreProfile(stored_bytes=2.0 * payload,
+                                 rmw_read_bytes=0.0)
+    rows = []
+    for name in (machines if machines is not None else registered_names()):
+        m = get_machine(name)
+        kw = dict(ws_bytes=ws, cores_active=m.cores, flavor=flavor)
+        zero = wa.priced_store_traffic(prof_zero, m, **kw)
+        recycled = wa.priced_store_traffic(prof_recycled, m, **kw)
+        fresh = wa.priced_store_traffic(prof_fresh, m, **kw)
+        rows.append({
+            "machine": m.name, "page_size": ps, "prompt_len": prompt_len,
+            "max_len": max_len, "prompt_pages": npg,
+            "shared_pages": shared,
+            "zero_fill_bytes": zero, "recycled_bytes": recycled,
+            "fresh_bytes": fresh,
+            "savings_ratio": zero / max(recycled, 1e-30),
+        })
+    if not all(math.isfinite(r["savings_ratio"]) for r in rows):
+        raise AssertionError("non-finite admission pricing")
     return rows

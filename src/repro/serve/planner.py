@@ -65,6 +65,10 @@ class ChunkPlan:
     # (repro.kernels.stores) and the per-machine selections
     store_flavor: str = "standard"
     per_machine_flavor: dict | None = None
+    # paged-KV geometry the plan was priced for (None = dense slots):
+    # the occupancy bound rounds to the page grid, not the autotuned
+    # KV block, because a page is the paged kernel's DMA unit
+    page_size: int | None = None
 
 
 def clear_plan_cache() -> None:
@@ -124,20 +128,27 @@ def kv_read_seconds(cfg: ModelConfig, batch: int, kv_tokens: int,
 
 
 def _kernel_adjusted(cfg: ModelConfig, batch: int, max_len: int,
-                     occupancy: int, per_machine: dict) -> dict:
+                     occupancy: int, per_machine: dict,
+                     page_size: int | None = None) -> dict:
     """Re-price per-machine dense step costs for the split-KV kernel.
 
     Swaps the full-horizon KV read for the occupancy-bounded one —
     tiled and rounded exactly as the executed kernel path would be
-    (``kv_traffic.bounded_decode_plan``). The floor keeps the adjusted
-    cost from going below the bounded read itself when the port model
-    and the ladder disagree about the dense share.
+    (``kv_traffic.bounded_decode_plan``; with ``page_size`` set the
+    bound rounds to the page grid instead, since the paged kernel's KV
+    block is pinned to the page). The floor keeps the adjusted cost
+    from going below the bounded read itself when the port model and
+    the ladder disagree about the dense share.
     """
     from repro.serve.kv_traffic import bounded_decode_plan
     out = {}
     for name, t_dense in per_machine.items():
-        _, bound = bounded_decode_plan(cfg, batch, max_len, occupancy,
-                                       name)
+        if page_size is not None:
+            bound = min(math.ceil(occupancy / page_size) * page_size,
+                        max_len)
+        else:
+            _, bound = bounded_decode_plan(cfg, batch, max_len, occupancy,
+                                           name)
         dense_kv = kv_read_seconds(cfg, batch, max_len, name,
                                    max_len=max_len)
         split_kv = kv_read_seconds(cfg, batch, bound, name,
@@ -154,7 +165,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                     hlo_text: str | None = None,
                     occupancy: int | None = None,
                     backend: str = "tp_bound",
-                    store_flavor: str = "auto") -> ChunkPlan:
+                    store_flavor: str = "auto",
+                    page_size: int | None = None) -> ChunkPlan:
     """Pick the decode chunk size from the port model's per-step cost.
 
     chunk = ceil(dispatch_overhead / (overhead_frac * t_step)) clamped to
@@ -180,6 +192,11 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     (repro.kernels.stores) and recorded on the plan — ``auto`` picks
     each machine's cheaper modeled store path, so every plan knows
     which KV-writer flavor it was priced for.
+
+    ``page_size`` records paged-KV geometry (repro.serve.pages): the
+    occupancy bound then rounds to the page grid (the paged kernel's
+    KV block is pinned to the page) instead of the machine's autotuned
+    dense block.
     """
     from repro.core.backends import get_backend
     backend = get_backend(backend).name     # canonical (aliases fold)
@@ -190,7 +207,7 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     if hlo_text is None:
         cache_key = (cfg, batch, max_len, machine, dispatch_overhead_s,
                      overhead_frac, max_chunk, occupancy, backend,
-                     store_flavor, registered_names())
+                     store_flavor, page_size, registered_names())
         hit = _PLAN_CACHE.get(cache_key)
         if hit is not None:
             return hit
@@ -206,7 +223,7 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     if occupancy is not None:
         per_machine_dense = dict(per_machine)
         per_machine = _kernel_adjusted(cfg, batch, max_len, occupancy,
-                                       per_machine)
+                                       per_machine, page_size=page_size)
     t_step = per_machine[get_machine(machine).name]
     chunk = 1 if t_step <= 0 else math.ceil(
         dispatch_overhead_s / (overhead_frac * t_step))
@@ -225,7 +242,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                      backend=backend,
                      store_flavor=per_machine_flavor[
                          get_machine(machine).name],
-                     per_machine_flavor=per_machine_flavor)
+                     per_machine_flavor=per_machine_flavor,
+                     page_size=page_size)
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = plan
     return plan

@@ -28,3 +28,50 @@ settings.register_profile(
     suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
 )
 settings.load_profile("repro")
+
+
+def _property_engine() -> str:
+    """Which engine @given-decorated tests actually ran on."""
+    import hypothesis
+    if getattr(hypothesis, "__is_repro_stub__", False):
+        return "stub"
+    return "hypothesis"
+
+
+def pytest_collection_modifyitems(config, items):
+    """Tag property-based tests with the engine that drives them.
+
+    The stub fallback must never be silent: every ``@given`` test gets
+    a ``hypothesis_stub`` or ``hypothesis_real`` marker (selectable
+    with ``-m``), and the counts feed the terminal summary line below
+    so a CI log always states which engine exercised the properties.
+    """
+    import pytest
+
+    n_stub = n_real = 0
+    for item in items:
+        fn = getattr(item, "function", None)
+        if fn is None:
+            continue
+        if getattr(fn, "hypothesis_stub", False):
+            item.add_marker(pytest.mark.hypothesis_stub)
+            n_stub += 1
+        elif hasattr(fn, "hypothesis"):     # real hypothesis wraps here
+            item.add_marker(pytest.mark.hypothesis_real)
+            n_real += 1
+    config._property_test_counts = (n_stub, n_real)
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    """One unmissable line: stubbed vs exhaustive property coverage."""
+    n_stub, n_real = getattr(config, "_property_test_counts", (0, 0))
+    if n_stub == 0 and n_real == 0:
+        return
+    if _property_engine() == "stub":
+        msg = (f"[property-tests] {n_stub} hypothesis-driven tests; "
+               "engine: DETERMINISTIC STUB (boundary + 12 seeded examples "
+               "each — install the [dev] extra for exhaustive coverage)")
+    else:
+        msg = (f"[property-tests] {n_real} hypothesis-driven tests; "
+               "engine: hypothesis (repro profile, 20 examples each)")
+    terminalreporter.write_line(msg)

@@ -105,6 +105,113 @@ def test_decode_attention_impl_routes_through_ops():
     np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
 
 
+# --- paged kernel parity (interpret mode on CPU) ---------------------------
+
+def _paginate(k, v, ps, seed=7, n_extra=3):
+    """Scatter a dense (B, Skv, Hkv, Dh) cache into a shared page pool.
+
+    Physical pages are assigned through a *permuted* (out-of-order)
+    block table, extra unmapped pages and the partial-last-page tail are
+    filled with garbage, so parity only holds if the kernel really
+    gathers through the table and masks by logical position.
+    """
+    b, skv, hkv, dh = k.shape
+    nb = -(-skv // ps)
+    rng = np.random.default_rng(seed)
+    n_pages = b * nb + n_extra
+    perm = rng.permutation(n_pages)[:b * nb].reshape(b, nb)
+    kp = rng.standard_normal((n_pages, ps, hkv, dh)).astype(np.float32)
+    vp = rng.standard_normal((n_pages, ps, hkv, dh)).astype(np.float32)
+    kd, vd = np.asarray(k), np.asarray(v)
+    for i in range(b):
+        for j in range(nb):
+            rows = min(ps, skv - j * ps)        # partial last page: the
+            kp[perm[i, j], :rows] = kd[i, j * ps:j * ps + rows]
+            vp[perm[i, j], :rows] = vd[i, j * ps:j * ps + rows]
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(perm, jnp.int32)
+
+
+PAGED_CASES = [
+    # (b, skv, h, hkv, dh, window, ps, n_splits, pos)
+    (2, 64, 4, 2, 32, None, 16, 1, 40),            # GQA g=2
+    (2, 64, 8, 2, 32, None, 8, 2, 63),             # g=4, splits
+    (3, 80, 4, 1, 32, None, 16, 2, [3, 40, 79]),   # MQA, ragged pos
+    (2, 96, 4, 4, 64, 24, 16, 3, [10, 90]),        # sliding window
+    (2, 50, 4, 2, 32, 16, 16, 1, 49),              # partial last page
+]
+
+
+@pytest.mark.parametrize("b,skv,h,hkv,dh,window,ps,ns,pos", PAGED_CASES)
+def test_flash_decode_paged_vs_dense(b, skv, h, hkv, dh, window, ps, ns,
+                                     pos):
+    q, k, v = _rand_case(b, skv, h, hkv, dh)
+    pos = jnp.asarray(pos, jnp.int32)
+    kp, vp, bt = _paginate(k, v, ps)
+    got = D.flash_decode_paged(q, kp, vp, bt, pos, window=window,
+                               n_splits=ns, interpret=True)
+    ref = A.decode_attention(q, k, v, pos, window=window)
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_paged_multi_token():
+    """Sq>1 against the page pool: causal among the query tokens."""
+    b, skv, h, hkv, dh, sq, pos0 = 2, 64, 4, 2, 32, 3, 17
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, hkv, dh), jnp.float32)
+    kp, vp, bt = _paginate(k, v, 8)
+    got = D.flash_decode_paged(q, kp, vp, bt, jnp.int32(pos0),
+                               n_splits=2, interpret=True)
+    ref = A.dense_causal_attention(q, k[:, :pos0 + sq], v[:, :pos0 + sq],
+                                   q_offset=pos0)
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_ref_decode_paged_matches_dense():
+    """The pure-JAX paged oracle (the serve path off-TPU) is exact."""
+    q, k, v = _rand_case(2, 64, 4, 2, 32, seed=2)
+    pos = jnp.asarray([5, 30], jnp.int32)
+    kp, vp, bt = _paginate(k, v, 8)
+    got = D.ref_decode_paged(q, kp, vp, bt, pos)
+    ref = A.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_ops_routing_and_page_bound():
+    """ops.flash_decode_paged: every impl, with and without a kv_len
+    occupancy bound (sliced at page granularity), same numerics."""
+    q, k, v = _rand_case(2, 64, 4, 2, 32, seed=3)
+    pos = jnp.asarray([9, 21], jnp.int32)
+    kp, vp, bt = _paginate(k, v, 8)
+    ref = A.decode_attention(q, k, v, pos)
+    for impl in ("ref", "auto", "pallas"):
+        for kv_len in (None, 22, 40):
+            got = kops.flash_decode_paged(q, kp, vp, bt, pos, impl=impl,
+                                          kv_len=kv_len)
+            np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{impl}/{kv_len}")
+
+
+def test_paged_dead_table_columns_are_masked():
+    """Columns past a slot's live pages may hold *any* valid page id
+    (the engine maps them to the scratch page; recycled tables may
+    alias other slots' pages) — logical-position masking must zero
+    them regardless of what they point at."""
+    q, k, v = _rand_case(2, 64, 4, 2, 32, seed=5)
+    pos = jnp.asarray([9, 21], jnp.int32)       # live pages: 2 and 3
+    kp, vp, bt = _paginate(k, v, 8)
+    rng = np.random.default_rng(11)
+    bad = np.asarray(bt).copy()
+    for i, live in enumerate([2, 3]):
+        bad[i, live:] = rng.integers(0, kp.shape[0], bad.shape[1] - live)
+    ref = A.decode_attention(q, k, v, pos)
+    for ns in (1, 2):
+        got = D.flash_decode_paged(q, kp, vp, jnp.asarray(bad, jnp.int32),
+                                   pos, n_splits=ns, interpret=True)
+        np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
 # --- MemTier-driven autotuner ----------------------------------------------
 
 def test_autotuned_tiles_differ_across_machines():

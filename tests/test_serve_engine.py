@@ -88,6 +88,32 @@ def test_admit_evict_keeps_streams_independent():
             err_msg=f"stream {r.rid} disturbed by batch-mates")
 
 
+def test_cancel_returns_partial_stream_and_frees_slot():
+    """cancel() mid-flight hands back the tokens decoded so far (a
+    prefix of the uncancelled stream), frees the slot, and the next
+    request served from that slot is undisturbed."""
+    cfg = get_smoke_config("yi-9b")
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    pa = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 8))
+    pb = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 8))
+    eng = ServeEngine(cfg, params, max_slots=1, max_len=24, chunk=3)
+    assert eng.step() == []                     # idle engine: no-op
+    eng.admit(Request("a", pa, 12))
+    eng.step()                                  # a few tokens in flight
+    assert eng.cancel("zzz") is None            # unknown rid
+    part = eng.cancel("a")
+    assert eng.free_slots() == [0]
+    full = ServeEngine(cfg, params, max_slots=1, max_len=24,
+                       chunk=3).run([Request("a", pa, 12)])["a"]
+    assert 1 <= len(part) < len(full)
+    np.testing.assert_array_equal(part, full[:len(part)])
+    res = eng.run([Request("b", pb, 6)])
+    solo = ServeEngine(cfg, params, max_slots=1, max_len=24,
+                       chunk=3).run([Request("b", pb, 6)])
+    np.testing.assert_array_equal(res["b"], solo["b"])
+
+
 def test_decode_cache_update_stays_in_place():
     """Donation: no full-cache-leaf copy of the cache *arguments* in the
     lowered HLO (without donation XLA copies every KV buffer per chunk)."""
