@@ -5,8 +5,14 @@ slots free up; the KV slot cache is preallocated once and updated in
 place (the framework's NT-store analogue).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
+Sharded (2 fake host devices, heads split over TP):
+      XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+          PYTHONPATH=src python examples/serve_lm.py --mesh data,model=1,2
+Replicated (2 engines behind the round-robin router):
+      PYTHONPATH=src python examples/serve_lm.py --replicas 2
 """
 
+import argparse
 import time
 
 import jax
@@ -14,10 +20,21 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import model as M
-from repro.serve import Request, ServeEngine
+from repro.serve import ReplicaRouter, Request, ServeEngine
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec 'data,model=1,N' "
+                         "(default: single-device, no mesh)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the round-robin router")
+    args = ap.parse_args(argv)
+
+    from repro.launch.mesh import make_serve_mesh
+    mesh = make_serve_mesh(args.mesh)
+
     cfg = get_smoke_config("gemma3-4b")
     k_params, k_prompts = jax.random.split(jax.random.PRNGKey(0))
     params = M.init_params(cfg, k_params)
@@ -29,16 +46,24 @@ def main():
                     max_new_tokens=16 + 8 * (i % 3))
             for i in range(6)]
 
-    eng = ServeEngine(cfg, params, max_slots=2, max_len=64,
-                      temperature=0.8, seed=0)
+    engines = [ServeEngine(cfg, params, max_slots=2, max_len=64,
+                           temperature=0.8, seed=0, mesh=mesh)
+               for _ in range(max(1, args.replicas))]
+    eng = engines[0]
     t0 = time.time()
-    results = eng.run(list(reqs))
+    if len(engines) == 1:
+        results = eng.run(list(reqs))
+    else:
+        results = ReplicaRouter(engines, policy="round_robin",
+                                max_queue=len(reqs)).run(list(reqs))
     dt = time.time() - t0
     total = sum(len(v) for v in results.values())
+    shard = f", tp={eng.tp}" if mesh is not None else ""
+    repl = f", {len(engines)} replicas" if len(engines) > 1 else ""
     print(f"served {len(reqs)} requests on {eng.max_slots} slots: "
           f"{total} tokens in {dt:.2f}s — chunk={eng.chunk}, "
           f"{eng.decode_dispatches} decode dispatches, "
-          f"{eng.prefill_dispatches} prefills")
+          f"{eng.prefill_dispatches} prefills{shard}{repl}")
     for r in reqs:
         print(f"  {r.rid}: {len(results[r.rid])} tokens, "
               f"first 8 = {results[r.rid][:8].tolist()}")

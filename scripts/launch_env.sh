@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Serving launch environment. Source before any repro.launch entrypoint:
+#
+#   source scripts/launch_env.sh [n_host_devices]
+#
+# Two things are exported, both safe no-ops when unavailable:
+#
+# 1. tcmalloc preload — the serve engines churn large host buffers
+#    (prompt staging, per-round block tables, result assembly); glibc
+#    malloc's arena locking shows up in the dispatch loop under replica
+#    concurrency. If a tcmalloc shared object exists on this box it is
+#    LD_PRELOADed; otherwise nothing changes. The large-alloc report
+#    threshold is raised so page-pool-sized mmaps don't spam stderr.
+#
+# 2. XLA host device count — the sharded serve tests and fig9_load run
+#    TP over *faked* host devices
+#    (--xla_force_host_platform_device_count). The count comes from the
+#    first argument, then $REPRO_HOST_DEVICES, then defaults to 1 (the
+#    bit-exact single-device path). Set before the first jax import —
+#    jax pins the device count at init. An existing XLA_FLAGS value is
+#    kept and extended, never clobbered; if it already forces a device
+#    count, it wins.
+
+_repro_ndev="${1:-${REPRO_HOST_DEVICES:-1}}"
+
+for _repro_lib in \
+    /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+    /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+    /usr/lib/libtcmalloc_minimal.so.4 \
+    /usr/lib/libtcmalloc.so.4; do
+    if [ -f "${_repro_lib}" ]; then
+        case ":${LD_PRELOAD:-}:" in
+            *":${_repro_lib}:"*) ;;
+            *) export LD_PRELOAD="${_repro_lib}${LD_PRELOAD:+:${LD_PRELOAD}}" ;;
+        esac
+        # page pools are tens of MB per replica: mute the per-alloc log
+        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=1073741824
+        break
+    fi
+done
+unset _repro_lib
+
+case " ${XLA_FLAGS:-} " in
+    *xla_force_host_platform_device_count*) ;;
+    *)
+        export XLA_FLAGS="--xla_force_host_platform_device_count=${_repro_ndev}${XLA_FLAGS:+ ${XLA_FLAGS}}"
+        ;;
+esac
+unset _repro_ndev

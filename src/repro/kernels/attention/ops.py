@@ -27,6 +27,42 @@ from repro.kernels.attention import ref as R
 
 
 
+def validate_tp_heads(h: int, hkv: int, dh: int, tp: int, *,
+                      page_size: int | None = None) -> int:
+    """Check the decode dispatchers shard cleanly over ``tp`` TP shards.
+
+    The flash-decode kernels pack all GQA heads of one shard into a
+    single ``(Hkv_shard * G, Dh)`` query tile and tile the KV stream
+    themselves, so a head-sharded (``kvheads`` -> TP) cache splits the
+    kernel embarrassingly — *iff* the head counts divide: each shard
+    must own a whole number of KV heads, the query heads must follow
+    their KV groups, and the per-shard head tile must still be
+    non-empty (head-dim tiles divide the per-shard head count). The
+    paged kernel adds no head-side constraint (its KV block is the
+    page), so ``page_size`` participates only in the error message.
+    Returns the per-shard KV head count; raises ``ValueError`` on any
+    violation.
+    """
+    tp = max(1, int(tp))
+    what = "paged " if page_size is not None else ""
+    if hkv % tp != 0:
+        raise ValueError(
+            f"{what}decode cannot shard {hkv} KV heads over TP={tp}: "
+            "kvheads must divide the TP degree (pad heads or shrink "
+            "the model mesh axis)")
+    if h % tp != 0:
+        raise ValueError(
+            f"{what}decode cannot shard {h} query heads over TP={tp}: "
+            "GQA groups must stay whole per shard")
+    hkv_shard = hkv // tp
+    g = h // hkv
+    if hkv_shard * g < 1 or dh < 1:
+        raise ValueError(
+            f"{what}decode: empty per-shard head tile "
+            f"(hkv/tp={hkv_shard}, G={g}, Dh={dh})")
+    return hkv_shard
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "impl", "bq", "bk",
                                    "machine"))
 def flash_attention(q, k, v, *, causal=True, window=None, impl="auto",

@@ -32,3 +32,34 @@ def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh over however many real devices exist (tests/smoke)."""
     n = math.prod(shape)
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_serve_mesh(spec: str | None):
+    """Build a serve mesh from a CLI spec ``"axes=sizes"``, e.g.
+    ``"data,model=1,2"`` -> a (1, 2) mesh on axes ("data", "model").
+
+    ``None`` or ``""`` returns ``None`` — the engines' single-device
+    path. Sizes must multiply to at most the visible device count (use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fake N
+    host devices for CPU smoke runs).
+    """
+    if not spec:
+        return None
+    try:
+        axes_s, sizes_s = spec.split("=")
+        axes = tuple(a.strip() for a in axes_s.split(","))
+        shape = tuple(int(s) for s in sizes_s.split(","))
+    except ValueError as e:
+        raise ValueError(
+            f"bad mesh spec {spec!r}; expected 'axis,axis=size,size' "
+            "like 'data,model=1,2'") from e
+    if len(axes) != len(shape) or not axes:
+        raise ValueError(
+            f"mesh spec {spec!r}: {len(axes)} axes vs {len(shape)} sizes")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {spec!r} needs {n} devices, have {len(devs)}; run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.make_mesh(shape, axes, devices=devs[:n])

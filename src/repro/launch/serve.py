@@ -25,13 +25,18 @@ from repro.serve import Request, ServeEngine
 def generate(cfg, params, prompt_tokens, gen_len: int, *,
              temperature: float = 0.0, seed: int = 0,
              chunk: int | None = None, machine: str | None = None,
+             mesh=None, replicas: int = 1,
              engine_out: list | None = None):
     """Greedy/temperature batched generation. prompt_tokens: (B, S).
 
     One slot per prompt; the whole batch is admitted at once (a single
     batched prefill), then decoded in chunks. ``chunk=None`` plans the
     chunk size analytically from the port model (repro.serve.planner).
-    Pass a list as ``engine_out`` to receive the engine (dispatch
+    ``mesh`` shards every engine replica over the device mesh
+    (params + KV over ``kvheads`` -> TP; ``None`` keeps the bit-exact
+    single-device path); ``replicas > 1`` splits the batch across N
+    engines behind a round-robin :class:`repro.serve.ReplicaRouter`.
+    Pass a list as ``engine_out`` to receive the engine(s) (dispatch
     counters) for inspection.
     """
     import numpy as np
@@ -40,16 +45,26 @@ def generate(cfg, params, prompt_tokens, gen_len: int, *,
     if chunk is None and gen_len > 1:
         from repro.serve.planner import plan_chunk_size
         chunk = plan_chunk_size(cfg, b, s + gen_len, machine=machine,
-                                max_chunk=min(32, gen_len - 1)).chunk
-    eng = ServeEngine(cfg, params, max_slots=b, max_len=s + gen_len,
-                      chunk=min(chunk or 1, max(1, gen_len - 1)),
-                      temperature=temperature, seed=seed)
+                                max_chunk=min(32, gen_len - 1),
+                                mesh=mesh).chunk
+    replicas = max(1, int(replicas))
+    slots = -(-b // replicas)
+    engines = [ServeEngine(cfg, params, max_slots=slots,
+                           max_len=s + gen_len,
+                           chunk=min(chunk or 1, max(1, gen_len - 1)),
+                           temperature=temperature, seed=seed, mesh=mesh)
+               for _ in range(replicas)]
     prompts = np.asarray(prompt_tokens)
     reqs = [Request(rid=str(i), prompt=tuple(int(t) for t in prompts[i]),
                     max_new_tokens=gen_len) for i in range(b)]
-    results = eng.run(reqs)
+    if replicas == 1:
+        results = engines[0].run(reqs)
+    else:
+        from repro.serve import ReplicaRouter
+        results = ReplicaRouter(engines, policy="round_robin",
+                                max_queue=max(8, b)).run(reqs)
     if engine_out is not None:
-        engine_out.append(eng)
+        engine_out.extend(engines)
     import jax.numpy as jnp
     return jnp.stack([jnp.asarray(results[str(i)]) for i in range(b)])
 
@@ -66,8 +81,16 @@ def main(argv=None):
                          "port model's tier-resolved step cost)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec 'data,model=1,N' "
+                         "(default: single-device, no mesh)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the round-robin router "
+                         "(default 1: no router)")
     args = ap.parse_args(argv)
 
+    from repro.launch.mesh import make_serve_mesh
+    mesh = make_serve_mesh(args.mesh)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     # params and prompts must be independent streams: reusing one key for
@@ -80,13 +103,17 @@ def main(argv=None):
     t0 = time.time()
     toks = generate(cfg, params, prompts, args.gen,
                     temperature=args.temperature, seed=args.seed,
-                    chunk=args.chunk or None, engine_out=eng_out)
+                    chunk=args.chunk or None, mesh=mesh,
+                    replicas=args.replicas, engine_out=eng_out)
     dt = time.time() - t0
     eng = eng_out[0]
+    shard = f" tp={eng.tp}" if mesh is not None else ""
+    repl = f" x{len(eng_out)} replicas" if len(eng_out) > 1 else ""
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s) — "
           f"{eng.decode_dispatches} decode dispatches "
-          f"(chunk={eng.chunk}) + {eng.prefill_dispatches} prefill")
+          f"(chunk={eng.chunk}) + {eng.prefill_dispatches} prefill"
+          f"{shard}{repl}")
     print("sample:", toks[0, :16].tolist())
     return toks
 

@@ -422,6 +422,9 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
         row = p1 % ps
         kc = cache["k"].at[phys, row].set(k[:, 0].astype(cache["k"].dtype))
         vc = cache["v"].at[phys, row].set(v[:, 0].astype(cache["v"].dtype))
+        # page pools stay pool-resident with heads on TP (no-op unmeshed)
+        kc = sc(kc, None, None, "kvheads", None)
+        vc = sc(vc, None, None, "kvheads", None)
         y = attn_lib.decode_attention(q, kc, vc, pos, window=window,
                                       impl=attn_impl or "ref",
                                       kv_len=kv_len,
@@ -433,6 +436,10 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
         # nt = the cache-aliased full-tile Pallas writer
         kc = stores_lib.kv_row_update(cache["k"], k, pos, flavor=flav)
         vc = stores_lib.kv_row_update(cache["v"], v, pos, flavor=flav)
+        # keep the updated cache on the slot-cache layout: the in-place
+        # row write must not trigger a resharding gather (no-op unmeshed)
+        kc = sc(kc, "batch", "kv_seq", "kvheads", None)
+        vc = sc(vc, "batch", "kv_seq", "kvheads", None)
         y = attn_lib.decode_attention(q, kc, vc, pos, window=window,
                                       impl=attn_impl or "ref",
                                       kv_len=kv_len)
@@ -449,6 +456,8 @@ def _attn_mixer(cfg: ModelConfig, p: dict, x, *, local: bool, mode: str,
                 # (donation), with no post-hoc jnp.pad regrow/copy
                 kd = stores_lib.pad_to_horizon(kd, cache_len, flavor=flav)
                 vd = stores_lib.pad_to_horizon(vd, cache_len, flavor=flav)
+            kd = sc(kd, "batch", "kv_seq", "kvheads", None)
+            vd = sc(vd, "batch", "kv_seq", "kvheads", None)
             new_cache = {"k": kd, "v": vd}
     out = jnp.einsum("bshe,hed->bsd", y, p["wo"])
     return out, new_cache

@@ -24,24 +24,38 @@ size from the port model's tier-resolved per-step cost
 updates, paged gathers, CoW copies, recycled admissions — is priced
 through ``wa``/``memtier`` so every delta is reported per machine
 (``repro.serve.kv_traffic``).
+
+Both engines accept ``mesh=``/``rules=``: with a device mesh the
+params and the KV cache (dense stripes or page pools) are laid out by
+the logical-axis rules (``kvheads`` -> TP), the step functions trace
+with ``sc()`` constraints live, and the planner prices the per-shard
+KV stream plus the per-step activation all-reduce
+(``kv_traffic.collective_traffic``). ``mesh=None`` is the bit-exact
+single-device path. ``ReplicaRouter`` (``repro.serve.router``) scales
+*traffic* instead: N replicas behind a round-robin / least-loaded
+admission controller with per-replica queues and backpressure.
 """
 
 from repro.serve.decode import make_chunked_decode_step
 from repro.serve.engine import PagedServeEngine, Request, ServeEngine
-from repro.serve.kv_traffic import (cow_fork_traffic, decode_read_traffic,
-                                    kv_update_traffic,
+from repro.serve.kv_traffic import (collective_traffic, cow_fork_traffic,
+                                    decode_read_traffic, kv_update_traffic,
                                     page_admission_traffic,
                                     page_gather_traffic)
-from repro.serve.pages import PagePool
+from repro.serve.pages import PagePool, paged_cache_pspecs
 from repro.serve.planner import (ChunkPlan, decode_step_hlo,
                                  kv_read_seconds, plan_chunk_size)
+from repro.serve.router import QueueFull, ReplicaRouter
 
 __all__ = [
     "ChunkPlan",
     "PagePool",
     "PagedServeEngine",
+    "QueueFull",
+    "ReplicaRouter",
     "Request",
     "ServeEngine",
+    "collective_traffic",
     "cow_fork_traffic",
     "decode_read_traffic",
     "decode_step_hlo",
@@ -50,5 +64,6 @@ __all__ = [
     "make_chunked_decode_step",
     "page_admission_traffic",
     "page_gather_traffic",
+    "paged_cache_pspecs",
     "plan_chunk_size",
 ]

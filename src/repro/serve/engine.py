@@ -40,12 +40,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.attention.ops import validate_tp_heads
 from repro.models import model as M
 from repro.serve import pages as pages_lib
 from repro.serve.decode import make_chunked_decode_step
 from repro.serve.planner import plan_chunk_size
 from repro.serve.slots import make_insert_step
 from repro.train import serve as serve_lib
+from repro.utils.sharding import (SERVE_ENGINE_RULES, mesh_axis_sizes,
+                                  named_sharding, tp_degree, use_mesh_rules)
+
+
+def _named(mesh, pspecs):
+    """PartitionSpec tree -> NamedSharding tree (P is a tuple: mark leaves)."""
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(lambda s: named_sharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +99,8 @@ class ServeEngine:
                  machine: str | None = None,
                  attn_impl: str | None = None,
                  kv_len: int | None = None,
-                 store_flavor: str = "auto"):
+                 store_flavor: str = "auto",
+                 mesh=None, rules: dict | None = None):
         assert cfg.embed_inputs, "serve engine needs a token-id model"
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
@@ -105,6 +116,25 @@ class ServeEngine:
         # selection on the plan but executes NT kernels only on a real
         # TPU, so off-TPU serving keeps the standard XLA path.
         self.store_flavor = store_flavor
+        # mesh=None keeps the single-device path bit-for-bit: every
+        # sharding hook below is behind the mesh guard. With a mesh,
+        # params/cache are device_put against param_pspecs/cache_pspecs
+        # under ``rules`` (SERVE_ENGINE_RULES by default: kvheads -> TP,
+        # kv_seq resident), the step functions trace with the ambient
+        # mesh+rules installed (sc() constraints go live), and the
+        # planner prices the per-shard KV stream + per-step collective.
+        self.mesh = mesh
+        self.rules = (rules if rules is not None else SERVE_ENGINE_RULES) \
+            if mesh is not None else None
+        self._mesh_sizes = mesh_axis_sizes(mesh) if mesh is not None else {}
+        self.tp = tp_degree(self._mesh_sizes, self.rules)
+        if mesh is not None:
+            validate_tp_heads(cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim_eff, self.tp,
+                              page_size=getattr(self, "page_size", None))
+            self.params = jax.device_put(
+                params, _named(mesh, M.param_pspecs(cfg, self.rules,
+                                                    self._mesh_sizes)))
         if chunk is None:
             self.plan = self._make_plan(machine)
             chunk = self.plan.chunk
@@ -124,24 +154,54 @@ class ServeEngine:
         """Analytic chunk plan for this cache layout."""
         return plan_chunk_size(self.cfg, self.max_slots, self.max_len,
                                machine=machine, occupancy=self.kv_len,
-                               store_flavor=self.store_flavor)
+                               store_flavor=self.store_flavor,
+                               mesh=self.mesh, rules=self.rules)
+
+    def _traced(self, fn):
+        """Install the engine's mesh+rules around ``fn`` for jit tracing.
+
+        jit calls the wrapped function once per trace (including the
+        per-prompt-length prefill retraces), so the thread-local
+        ``use_mesh_rules`` context is live exactly when the model's
+        ``sc()`` constraints are staged. ``mesh=None`` returns ``fn``
+        untouched — the unsharded engine traces the very same function
+        object it always did.
+        """
+        if self.mesh is None:
+            return fn
+        mesh, rules = self.mesh, self.rules
+
+        def wrapped(*a, **kw):
+            with mesh, use_mesh_rules(mesh, rules):
+                return fn(*a, **kw)
+        return wrapped
+
+    def _shard_cache(self, cache, pspecs):
+        """Commit a fresh cache to its mesh layout (no-op unsharded)."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, _named(self.mesh, pspecs))
 
     def _build_state(self):
         """Allocate the cache and jit the per-layout dispatch steps."""
-        self.cache = M.init_cache(self.cfg, self.max_slots, self.max_len)
+        self.cache = self._shard_cache(
+            M.init_cache(self.cfg, self.max_slots, self.max_len),
+            M.cache_pspecs(self.cfg, self.rules, self._mesh_sizes,
+                           self.max_slots, self.max_len)
+            if self.mesh is not None else None)
         self._decode = jax.jit(
-            make_chunked_decode_step(self.cfg, self.chunk, self.temperature,
-                                     attn_impl=self.attn_impl,
-                                     kv_len=self.kv_len,
-                                     store_flavor=self.store_flavor),
+            self._traced(make_chunked_decode_step(
+                self.cfg, self.chunk, self.temperature,
+                attn_impl=self.attn_impl, kv_len=self.kv_len,
+                store_flavor=self.store_flavor)),
             donate_argnums=(1,))
-        self._insert = jax.jit(make_insert_step(self.cfg),
+        self._insert = jax.jit(self._traced(make_insert_step(self.cfg)),
                                donate_argnums=(0,))
         # jit retraces per prompt length/batch shape on its own — one
         # wrapper serves every admission path
-        self._prefill = jax.jit(serve_lib.make_prefill_step(
+        self._prefill = jax.jit(self._traced(serve_lib.make_prefill_step(
             self.cfg, cache_len=self.max_len,
-            store_flavor=self.store_flavor))
+            store_flavor=self.store_flavor)))
 
     def _insert_prefilled(self, slot: int, one, prompt) -> None:
         """Land one prefilled (batch-1) request cache in ``slot``."""
@@ -348,33 +408,41 @@ class PagedServeEngine(ServeEngine):
         return plan_chunk_size(self.cfg, self.max_slots, self.max_len,
                                machine=machine, occupancy=self.kv_len,
                                store_flavor=self.store_flavor,
-                               page_size=self.page_size)
+                               page_size=self.page_size,
+                               mesh=self.mesh, rules=self.rules)
 
     def _build_state(self):
         cfg, ps = self.cfg, self.page_size
         self.pool = pages_lib.PagePool(self.n_pages, ps)
         self._scratch = self.n_pages          # physical index of scratch
-        self.cache = pages_lib.init_paged_cache(
-            cfg, self.max_slots, self.n_pages + 1, ps)
+        self.cache = self._shard_cache(
+            pages_lib.init_paged_cache(cfg, self.max_slots,
+                                       self.n_pages + 1, ps),
+            pages_lib.paged_cache_pspecs(cfg, self.rules, self._mesh_sizes,
+                                         self.max_slots, self.n_pages + 1,
+                                         ps)
+            if self.mesh is not None else None)
         self.block_tables = np.full(
             (self.max_slots, self.pages_per_slot), -1, np.int32)
         self._decode = jax.jit(
-            make_chunked_decode_step(cfg, self.chunk, self.temperature,
-                                     attn_impl=self.attn_impl,
-                                     kv_len=self.kv_len,
-                                     store_flavor=self.store_flavor,
-                                     paged=True),
+            self._traced(make_chunked_decode_step(
+                cfg, self.chunk, self.temperature,
+                attn_impl=self.attn_impl, kv_len=self.kv_len,
+                store_flavor=self.store_flavor, paged=True)),
             donate_argnums=(1,))
         self._page_insert = jax.jit(
-            pages_lib.make_paged_insert_step(cfg, ps), donate_argnums=(0,))
+            self._traced(pages_lib.make_paged_insert_step(cfg, ps)),
+            donate_argnums=(0,))
         self._page_copy = jax.jit(
-            pages_lib.make_page_copy_step(cfg), donate_argnums=(0,))
+            self._traced(pages_lib.make_page_copy_step(cfg)),
+            donate_argnums=(0,))
         self._slot_copy = jax.jit(
-            pages_lib.make_slot_copy_step(cfg), donate_argnums=(0,))
+            self._traced(pages_lib.make_slot_copy_step(cfg)),
+            donate_argnums=(0,))
         # prefill at *exactly* the prompt length: no horizon zero-fill —
         # fresh pages get real rows, recycled pages keep stale ones
-        self._prefill = jax.jit(serve_lib.make_prefill_step(
-            cfg, cache_len=None, store_flavor=self.store_flavor))
+        self._prefill = jax.jit(self._traced(serve_lib.make_prefill_step(
+            cfg, cache_len=None, store_flavor=self.store_flavor)))
         self.gather_pages = 0                 # live pages read, summed
                                               # over dispatches (fig8)
 

@@ -51,6 +51,69 @@ def kv_row_bytes(cfg: ModelConfig, batch: int) -> float:
         * cfg.n_kv_heads * cfg.head_dim_eff * eb
 
 
+def tp_reduce_count(cfg: ModelConfig) -> int:
+    """All-reduces one token step issues under tensor parallelism.
+
+    Every mixer ends in an output projection contracting over a
+    TP-sharded inner dim (attention heads, mamba/xLSTM inner, sLSTM
+    hidden), and every FFN/MoE block contracts over the sharded
+    ``mlp``/``emlp`` dim — each contributes one partial-sum all-reduce
+    of the (B, d_model) activation per step.
+    """
+    n = 0
+    for blk in cfg.layer_plan():
+        n += 1                                   # mixer output projection
+        if blk.split(":")[1] != "none":
+            n += 1                               # FFN down projection
+    return n
+
+
+def collective_traffic(cfg: ModelConfig, batch: int, tp: int, *,
+                       machines=None, ws_bytes: float | None = None,
+                       cores_active: int | None = None) -> list:
+    """Per-machine traffic of the per-step activation all-reduces.
+
+    With the serving stack TP-sharded over ``tp`` shards, every decode
+    token pays :func:`tp_reduce_count` ring all-reduces of the
+    (B, d_model) activation: each shard moves ``2 * (tp-1)/tp`` of the
+    payload in (loads) and the same out again (allocating stores of
+    the reduced chunks). The store side is WA-priced through each
+    machine's MemTier ladder (``memtier.transfer_time``) — homed to
+    the tier ``ws_bytes`` resolves to (callers pass the serve step's
+    resident working set; default is the ring traffic itself) — so the
+    per-shard collective bytes preserve the paper's Grace <= SPR <=
+    Zen 4 store-traffic ordering exactly like every other serve-path
+    traffic class. ``tp=1`` prices to zero on every machine (no mesh,
+    no collectives).
+    """
+    from repro.core import memtier
+
+    tp = max(1, int(tp))
+    eb = dtype_bytes(_JAX_DTYPE.get(cfg.param_dtype, "f32"))
+    n_red = tp_reduce_count(cfg)
+    payload = float(batch * cfg.d_model * eb) * n_red
+    ring = 2.0 * (tp - 1) / tp * payload
+    rows = []
+    for name in (machines if machines is not None else registered_names()):
+        m = get_machine(name)
+        res = memtier.transfer_time(
+            m, ws_bytes=float(ws_bytes) if ws_bytes is not None else
+            max(ring, 1.0),
+            load_bytes=ring, store_bytes=ring,
+            cores_active=cores_active if cores_active is not None
+            else m.cores)
+        rows.append({
+            "machine": m.name, "tp": tp, "n_reduces": n_red,
+            "payload_bytes": payload, "ring_bytes": ring,
+            "coll_bytes": res.traffic_bytes,
+            "coll_seconds": res.seconds,
+            "home_tier": res.home,
+        })
+    if not all(math.isfinite(r["coll_seconds"]) for r in rows):
+        raise AssertionError("non-finite collective-traffic pricing")
+    return rows
+
+
 def bounded_decode_plan(cfg: ModelConfig, batch: int, max_len: int,
                         occupancy: int, machine) -> tuple:
     """(TilePlan, bounded rows) of the split-KV kernel at an occupancy.

@@ -89,6 +89,25 @@ def init_paged_cache(cfg: ModelConfig, max_slots: int, n_pages: int,
                                            page_size))
 
 
+def paged_cache_pspecs(cfg: ModelConfig, rules: dict, mesh_sizes: dict,
+                       max_slots: int, n_pages: int,
+                       page_size: int) -> dict:
+    """PartitionSpec tree matching :func:`paged_cache_shapes`.
+
+    KV pool leaves ``(P, page, Hkv, Dh)`` keep the pool and page dims
+    resident (every shard must see every block-table entry; the gather
+    is the kernel's job) and put the TP split on ``kvheads`` — the
+    ``batch``/``kv_seq`` rules are masked out so the dense cache rules
+    can never claim the pool dims. Recurrent leaves keep their dense
+    slot-batched specs.
+    """
+    flags = kv_leaf_flags(cfg)
+    pool_rules = dict(rules, batch=(), kv_seq=())
+    kv = M.cache_pspecs(cfg, pool_rules, mesh_sizes, n_pages, page_size)
+    slot = M.cache_pspecs(cfg, rules, mesh_sizes, max_slots, 1)
+    return jax.tree.map(lambda f, a, b: a if f else b, flags, kv, slot)
+
+
 def paged_kv_bytes(cfg: ModelConfig, n_pages: int, page_size: int) -> int:
     """Total bytes of the KV page pools (fig8's peak-memory quantity)."""
     flags = kv_leaf_flags(cfg)

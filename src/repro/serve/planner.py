@@ -69,6 +69,12 @@ class ChunkPlan:
     # the occupancy bound rounds to the page grid, not the autotuned
     # KV block, because a page is the paged kernel's DMA unit
     page_size: int | None = None
+    # tensor-parallel degree the plan priced (1 = unsharded): the KV
+    # stream is divided per shard and the per-step activation
+    # all-reduce (kv_traffic.collective_traffic) is added per machine
+    tp: int = 1
+    # machine name -> seconds of the per-step collective (tp > 1 only)
+    per_machine_collective: dict | None = None
 
 
 def clear_plan_cache() -> None:
@@ -107,7 +113,8 @@ def decode_step_hlo(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def kv_read_seconds(cfg: ModelConfig, batch: int, kv_tokens: int,
-                    machine, *, max_len: int | None = None) -> float:
+                    machine, *, max_len: int | None = None,
+                    tp: int = 1) -> float:
     """Tier-resolved seconds one decode step spends streaming KV.
 
     ``kv_tokens`` cache rows per slot, K and V, every attention layer —
@@ -115,10 +122,15 @@ def kv_read_seconds(cfg: ModelConfig, batch: int, kv_tokens: int,
     max_len``) from the split-KV kernel (``kv_tokens`` = occupancy
     rounded to the machine's block). The working set is the allocated
     cache (``max_len`` horizon), so the read resolves to the tier the
-    slot cache actually lives in on that machine.
+    slot cache actually lives in on that machine. ``tp`` divides both
+    the stream and the working set per tensor-parallel shard (the
+    kvheads -> TP cache layout): a shard streams ``1/tp`` of the rows'
+    bytes, and its cache slice may even home a tier *inward* of the
+    unsharded one.
     """
     from repro.serve.kv_traffic import kv_row_bytes
-    row = kv_row_bytes(cfg, batch)
+    tp = max(1, int(tp))
+    row = kv_row_bytes(cfg, batch) / tp
     ws = row * (max_len if max_len is not None else kv_tokens)
     m = get_machine(machine)
     return memtier.memory_seconds(m, row * kv_tokens, ws_bytes=ws,
@@ -128,22 +140,30 @@ def kv_read_seconds(cfg: ModelConfig, batch: int, kv_tokens: int,
 
 
 def _kernel_adjusted(cfg: ModelConfig, batch: int, max_len: int,
-                     occupancy: int, per_machine: dict,
-                     page_size: int | None = None) -> dict:
-    """Re-price per-machine dense step costs for the split-KV kernel.
+                     occupancy: int | None, per_machine: dict,
+                     page_size: int | None = None, tp: int = 1,
+                     collective: dict | None = None) -> dict:
+    """Re-price per-machine dense step costs for the executed KV path.
 
-    Swaps the full-horizon KV read for the occupancy-bounded one —
-    tiled and rounded exactly as the executed kernel path would be
+    Swaps the full-horizon unsharded KV read the compiled HLO priced
+    for the one the engine actually streams: bounded by ``occupancy``
+    when the split-KV kernel is routed — tiled and rounded exactly as
+    the executed kernel path would be
     (``kv_traffic.bounded_decode_plan``; with ``page_size`` set the
     bound rounds to the page grid instead, since the paged kernel's KV
-    block is pinned to the page). The floor keeps the adjusted cost
-    from going below the bounded read itself when the port model and
-    the ladder disagree about the dense share.
+    block is pinned to the page) — and divided per shard when the
+    cache is TP-sharded (``tp`` > 1, the kvheads layout). ``collective``
+    adds each machine's per-step activation all-reduce seconds
+    (``kv_traffic.collective_traffic``) on top. The floor keeps the
+    adjusted cost from going below the priced KV stream itself when
+    the port model and the ladder disagree about the dense share.
     """
     from repro.serve.kv_traffic import bounded_decode_plan
     out = {}
     for name, t_dense in per_machine.items():
-        if page_size is not None:
+        if occupancy is None:
+            bound = max_len
+        elif page_size is not None:
             bound = min(math.ceil(occupancy / page_size) * page_size,
                         max_len)
         else:
@@ -152,8 +172,10 @@ def _kernel_adjusted(cfg: ModelConfig, batch: int, max_len: int,
         dense_kv = kv_read_seconds(cfg, batch, max_len, name,
                                    max_len=max_len)
         split_kv = kv_read_seconds(cfg, batch, bound, name,
-                                   max_len=max_len)
-        out[name] = max(t_dense - dense_kv + split_kv, split_kv, 1e-12)
+                                   max_len=max_len, tp=tp)
+        coll = (collective or {}).get(name, 0.0)
+        out[name] = max(t_dense - dense_kv + split_kv + coll,
+                        split_kv + coll, 1e-12)
     return out
 
 
@@ -166,7 +188,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                     occupancy: int | None = None,
                     backend: str = "tp_bound",
                     store_flavor: str = "auto",
-                    page_size: int | None = None) -> ChunkPlan:
+                    page_size: int | None = None,
+                    mesh=None, rules: dict | None = None) -> ChunkPlan:
     """Pick the decode chunk size from the port model's per-step cost.
 
     chunk = ceil(dispatch_overhead / (overhead_frac * t_step)) clamped to
@@ -197,17 +220,34 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     occupancy bound then rounds to the page grid (the paged kernel's
     KV block is pinned to the page) instead of the machine's autotuned
     dense block.
+
+    ``mesh``/``rules`` switch the plan to sharded pricing: the TP
+    degree is read off the mesh through the rules' ``kvheads`` axes
+    (``sharding.tp_degree``), the KV stream is divided per shard, and
+    the per-step activation all-reduce
+    (``kv_traffic.collective_traffic``) is priced per machine and
+    added to every per-machine cost. The memo key folds the mesh axis
+    sizes, a rules fingerprint, and the TP degree, so a sharded plan
+    never serves an unsharded admission (and vice versa).
     """
     from repro.core.backends import get_backend
+    from repro.utils.sharding import (SERVE_ENGINE_RULES, mesh_axis_sizes,
+                                      rules_fingerprint, tp_degree)
     backend = get_backend(backend).name     # canonical (aliases fold)
     if machine is None:
         names = registered_names()
         machine = "host_cpu" if "host_cpu" in names else names[0]
+    if mesh is not None and rules is None:
+        rules = SERVE_ENGINE_RULES
+    mesh_sizes = mesh_axis_sizes(mesh) if mesh is not None else {}
+    tp = tp_degree(mesh_sizes, rules) if mesh is not None else 1
     cache_key = None
     if hlo_text is None:
         cache_key = (cfg, batch, max_len, machine, dispatch_overhead_s,
                      overhead_frac, max_chunk, occupancy, backend,
-                     store_flavor, page_size, registered_names())
+                     store_flavor, page_size,
+                     tuple(sorted(mesh_sizes.items())),
+                     rules_fingerprint(rules), tp, registered_names())
         hit = _PLAN_CACHE.get(cache_key)
         if hit is not None:
             return hit
@@ -219,18 +259,27 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
         per_machine[get_machine(machine).name] = portmodel.analyze(
             hlo_text, machine,
             backend=backend).tier_bound_seconds(get_machine(machine))
+    from repro.kernels.stores import resolve_flavor
+    from repro.serve.kv_traffic import collective_traffic, kv_row_bytes
+    cache_ws = kv_row_bytes(cfg, batch) * max_len
+    per_machine_collective = None
+    if tp > 1:
+        per_machine_collective = {
+            r["machine"]: r["coll_seconds"]
+            for r in collective_traffic(cfg, batch, tp,
+                                        machines=tuple(per_machine),
+                                        ws_bytes=cache_ws)}
     per_machine_dense = None
-    if occupancy is not None:
+    if occupancy is not None or tp > 1:
         per_machine_dense = dict(per_machine)
         per_machine = _kernel_adjusted(cfg, batch, max_len, occupancy,
-                                       per_machine, page_size=page_size)
+                                       per_machine, page_size=page_size,
+                                       tp=tp,
+                                       collective=per_machine_collective)
     t_step = per_machine[get_machine(machine).name]
     chunk = 1 if t_step <= 0 else math.ceil(
         dispatch_overhead_s / (overhead_frac * t_step))
     chunk = max(1, min(max_chunk, chunk))
-    from repro.kernels.stores import resolve_flavor
-    from repro.serve.kv_traffic import kv_row_bytes
-    cache_ws = kv_row_bytes(cfg, batch) * max_len
     per_machine_flavor = {
         name: resolve_flavor(store_flavor, name, ws_bytes=cache_ws,
                              cores_active=get_machine(name).cores)
@@ -243,7 +292,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                      store_flavor=per_machine_flavor[
                          get_machine(machine).name],
                      per_machine_flavor=per_machine_flavor,
-                     page_size=page_size)
+                     page_size=page_size, tp=tp,
+                     per_machine_collective=per_machine_collective)
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = plan
     return plan

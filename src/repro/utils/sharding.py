@@ -42,6 +42,18 @@ TRAIN_RULES = {
 # Serving: no FSDP on weights by default (pure TP); big archs override.
 SERVE_RULES = dict(TRAIN_RULES, embed=())
 
+# Serve-engine rules (repro.serve.ServeEngine): the KV cache shards over
+# *heads* (kvheads -> TP) with the sequence dim resident — the split-KV
+# and paged decode kernels tile the sequence themselves, so the TP split
+# must land on the embarrassingly parallel head dim, not on kv_seq (which
+# SERVE_RULES would grab first and which a block-table gather cannot
+# shard). Batch stays on the data axis.
+SERVE_ENGINE_RULES = dict(SERVE_RULES, kv_seq=())
+
+# FSDP-flavored engine rules: same KV layout, activations 2D-sharded.
+SERVE_ENGINE_FSDP_RULES = dict(SERVE_ENGINE_RULES, act_batch=(),
+                               act_embed=FSDP)
+
 # FSDP serving for > HBM models. `act_embed` -> FSDP turns every matmul
 # into a partial-sum over resident 2D-sharded weights + an activation
 # all-reduce (KBs) instead of a per-layer weight all-gather (GBs) — see
@@ -75,6 +87,35 @@ def use_mesh_rules(mesh: Mesh | None, rules: dict | None):
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def tp_degree(mesh_sizes: dict, rules: dict | None = None) -> int:
+    """Tensor-parallel degree of a mesh under ``rules``.
+
+    The product of the mesh-axis sizes that the ``kvheads`` logical axis
+    may shard over — the number of ways attention heads (and with them
+    the per-shard KV stream) are split. ``rules=None`` uses the standard
+    TP group. Missing axes contribute 1, so a pure-data mesh (or no
+    mesh at all, ``mesh_sizes={}``) has TP degree 1.
+    """
+    axes = (rules or {}).get("kvheads", TP)
+    prod = 1
+    for a in axes:
+        prod *= int(mesh_sizes.get(a, 1))
+    return prod
+
+
+def rules_fingerprint(rules: dict | None) -> tuple:
+    """Stable, hashable identity of a rules table (plan memo keys).
+
+    ``id(rules)`` would alias a rebuilt-but-identical table to a
+    different key (and a mutated one to the same key); this folds the
+    table's *contents* instead. The ``None`` logical axis is folded via
+    ``str`` so the tuple sorts cleanly.
+    """
+    if rules is None:
+        return ()
+    return tuple(sorted((str(k), tuple(v)) for k, v in rules.items()))
 
 
 def spec_for(shape: tuple, axes: tuple, rules: dict, mesh_sizes: dict) -> P:

@@ -1,0 +1,156 @@
+"""Replica-router behaviour: admission policies, backpressure,
+cancel/fork forwarding, and end-to-end identity with a single engine.
+
+Policy/queueing mechanics run against a deterministic fake engine (no
+jax, no compiles — the router only touches the engine's slot surface);
+one integration test drives real engines through ``run`` and pins the
+tokens against a single-engine serve of the same requests.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serve import Request, ServeEngine
+from repro.serve.router import QueueFull, ReplicaRouter
+
+
+class _FakeSlot:
+    def __init__(self, rid, budget):
+        self.rid, self.remaining, self.out = rid, budget, []
+
+
+class FakeEngine:
+    """Slot-surface stub: each step every active slot emits one token
+    equal to its slot index (deterministic, engine-identifiable)."""
+
+    paged = True          # so fork() is allowed on the stub
+
+    def __init__(self, n_slots=2):
+        self.slots = [None] * n_slots
+
+    def free_slots(self):
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self, req, slot=None):
+        slot = self.free_slots()[0] if slot is None else slot
+        self.slots[slot] = _FakeSlot(req.rid, req.max_new_tokens)
+        return slot
+
+    def step(self):
+        retired = []
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.out.append(i)
+            s.remaining -= 1
+            if s.remaining <= 0:
+                retired.append((s.rid, np.asarray(s.out, np.int32)))
+                self.slots[i] = None
+        return retired
+
+    def cancel(self, rid):
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self.slots[i] = None
+                return np.asarray(s.out, np.int32)
+        return None
+
+    def fork(self, rid, new_rid, max_new_tokens=None):
+        src = next(s for s in self.slots if s is not None and s.rid == rid)
+        slot = self.free_slots()[0]
+        self.slots[slot] = _FakeSlot(
+            new_rid, src.remaining if max_new_tokens is None
+            else max_new_tokens)
+        return slot
+
+
+def _req(rid, budget=3):
+    return Request(rid=rid, prompt=(1, 2, 3), max_new_tokens=budget)
+
+
+def test_round_robin_rotates():
+    r = ReplicaRouter([FakeEngine(), FakeEngine(), FakeEngine()])
+    placed = [r.submit(_req(f"r{i}")) for i in range(6)]
+    assert placed == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_prefers_idle_replica():
+    r = ReplicaRouter([FakeEngine(), FakeEngine()], policy="least_loaded")
+    r.submit(_req("big", budget=50))     # lands on 0, 50 owed tokens
+    assert [r.submit(_req(f"s{i}")) for i in range(3)] == [1, 1, 1]
+
+
+def test_backpressure_raises_queue_full():
+    r = ReplicaRouter([FakeEngine(n_slots=1)], max_queue=2)
+    r.submit(_req("a"))
+    r.submit(_req("b"))
+    with pytest.raises(QueueFull):
+        r.submit(_req("c"))
+    r.step()                             # admits "a" into the slot
+    r.submit(_req("c"))                  # queue drained by one
+
+
+def test_duplicate_rid_rejected():
+    r = ReplicaRouter([FakeEngine()])
+    r.submit(_req("a"))
+    with pytest.raises(ValueError):
+        r.submit(_req("a"))
+
+
+def test_cancel_queued_and_active():
+    r = ReplicaRouter([FakeEngine(n_slots=1)], max_queue=4)
+    r.submit(_req("live", budget=5))
+    r.submit(_req("waiting", budget=5))
+    r.step()                             # "live" active, "waiting" queued
+    out_q = r.cancel("waiting")
+    assert out_q is not None and out_q.size == 0   # never decoded
+    out_a = r.cancel("live")
+    assert out_a is not None and out_a.size >= 1   # tokens so far
+    assert r.cancel("ghost") is None
+    assert not r.busy()
+
+
+def test_fork_lands_on_owning_replica():
+    r = ReplicaRouter([FakeEngine(), FakeEngine()])
+    r.submit(_req("parent", budget=4))   # round-robin -> replica 0
+    r.step()
+    assert r.fork("parent", "child") == 0
+    results = {}
+    while r.busy():
+        results.update(dict(r.step()))
+    assert set(results) == {"parent", "child"}
+    with pytest.raises(KeyError):
+        r.fork("ghost", "x")
+
+
+def test_run_drains_everything_under_backpressure():
+    r = ReplicaRouter([FakeEngine(n_slots=1), FakeEngine(n_slots=1)],
+                      policy="least_loaded", max_queue=1)
+    reqs = [_req(f"r{i}", budget=1 + i % 3) for i in range(9)]
+    results = r.run(reqs)
+    assert set(results) == {q.rid for q in reqs}
+    assert all(len(results[q.rid]) == q.max_new_tokens for q in reqs)
+    st = r.stats()
+    assert sum(s["completed"] for s in st) == len(reqs)
+    assert all(s["queued"] == 0 and s["active"] == 0 for s in st)
+
+
+def test_router_matches_single_engine_tokens():
+    cfg = get_smoke_config("xlstm-125m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=f"r{i}",
+                    prompt=tuple(int(t) for t in
+                                 rng.integers(0, cfg.vocab_size, 6)),
+                    max_new_tokens=3) for i in range(4)]
+
+    def mk():
+        return ServeEngine(cfg, params, max_slots=2, max_len=16, chunk=2)
+
+    solo = mk().run(list(reqs))
+    routed = ReplicaRouter([mk(), mk()], max_queue=4).run(list(reqs))
+    for r in reqs:
+        np.testing.assert_array_equal(routed[r.rid], solo[r.rid])
