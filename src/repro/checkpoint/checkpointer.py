@@ -10,6 +10,14 @@ a new save waits for the previous). Restore rebuilds arrays against the
 live mesh sharding when one is provided, so a checkpoint written on one
 mesh can restart on another (elastic re-shard path used by
 repro.launch.faults).
+
+Crash safety: every file lands via write-to-temp + ``os.replace`` and
+the whole step directory is renamed into place only after its COMMIT
+marker exists, so a writer killed at *any* point leaves either the
+previous committed snapshot or a ``.tmp`` directory that restore
+ignores — never a torn snapshot. A background-thread failure is
+captured and re-raised by the next ``wait()``/``save()`` instead of
+vanishing with the daemon thread.
 """
 
 from __future__ import annotations
@@ -55,6 +63,7 @@ class Checkpointer:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, tree, *, block: bool = False):
@@ -62,11 +71,26 @@ class Checkpointer:
         leaves, treedef = _flatten_with_paths(tree)
         host_leaves = [np.asarray(l) for l in leaves]   # device->host copy
         self._thread = threading.Thread(
-            target=self._write, args=(step, host_leaves, str(treedef)),
-            daemon=True)
+            target=self._guarded_write,
+            args=(step, host_leaves, str(treedef)), daemon=True)
         self._thread.start()
         if block:
             self.wait()
+
+    def _guarded_write(self, step: int, leaves, treedef_str: str):
+        """Run ``_write`` capturing any failure for the next ``wait()``."""
+        try:
+            self._write(step, leaves, treedef_str)
+        except BaseException as e:          # noqa: B036 - re-raised in wait
+            self._error = e
+
+    @staticmethod
+    def _put(path: str, writer) -> None:
+        """Write one file atomically: temp in the same dir + os.replace."""
+        tmp = path + ".part"
+        with open(tmp, "wb") as f:
+            writer(f)
+        os.replace(tmp, path)
 
     def _write(self, step: int, leaves, treedef_str: str):
         final = os.path.join(self.dir, f"step_{step:08d}")
@@ -77,21 +101,27 @@ class Checkpointer:
         for i, l in enumerate(leaves):
             enc, name = _encode(l)
             dtypes.append(name)
-            np.save(os.path.join(tmp, f"leaf_{i}.npy"), enc)
+            self._put(os.path.join(tmp, f"leaf_{i}.npy"),
+                      lambda f, a=enc: np.save(f, a))
         manifest = {"step": step, "n_leaves": len(leaves),
                     "dtypes": dtypes, "treedef": treedef_str}
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        with open(os.path.join(tmp, "COMMIT"), "w") as f:
-            f.write("ok")
+        self._put(os.path.join(tmp, "manifest.json"),
+                  lambda f: f.write(json.dumps(manifest).encode()))
+        # COMMIT last: restore only trusts directories that carry it, so
+        # a crash anywhere above leaves a .tmp dir all_steps() ignores
+        self._put(os.path.join(tmp, "COMMIT"), lambda f: f.write(b"ok"))
         shutil.rmtree(final, ignore_errors=True)
-        os.rename(tmp, final)
+        os.replace(tmp, final)
         self._gc()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("background checkpoint write failed") \
+                from err
 
     def _gc(self):
         steps = self.all_steps()
@@ -104,9 +134,16 @@ class Checkpointer:
         out = []
         for name in sorted(os.listdir(self.dir)):
             p = os.path.join(self.dir, name)
-            if name.startswith("step_") and \
-                    os.path.exists(os.path.join(p, "COMMIT")):
-                out.append(int(name.split("_")[1]))
+            # exact step_<digits> only: a crash can leave step_N.tmp
+            # behind (even with COMMIT inside, if it died between the
+            # marker write and the directory rename) — never loadable
+            if not name.startswith("step_"):
+                continue
+            suffix = name[len("step_"):]
+            if not suffix.isdigit():
+                continue
+            if os.path.exists(os.path.join(p, "COMMIT")):
+                out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> int | None:

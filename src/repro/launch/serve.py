@@ -26,7 +26,8 @@ def generate(cfg, params, prompt_tokens, gen_len: int, *,
              temperature: float = 0.0, seed: int = 0,
              chunk: int | None = None, machine: str | None = None,
              mesh=None, replicas: int = 1,
-             engine_out: list | None = None):
+             engine_out: list | None = None,
+             fault_tolerant: bool = False):
     """Greedy/temperature batched generation. prompt_tokens: (B, S).
 
     One slot per prompt; the whole batch is admitted at once (a single
@@ -35,9 +36,12 @@ def generate(cfg, params, prompt_tokens, gen_len: int, *,
     ``mesh`` shards every engine replica over the device mesh
     (params + KV over ``kvheads`` -> TP; ``None`` keeps the bit-exact
     single-device path); ``replicas > 1`` splits the batch across N
-    engines behind a round-robin :class:`repro.serve.ReplicaRouter`.
-    Pass a list as ``engine_out`` to receive the engine(s) (dispatch
-    counters) for inspection.
+    engines behind a round-robin :class:`repro.serve.ReplicaRouter`,
+    and ``fault_tolerant=True`` upgrades the router to
+    :class:`repro.serve.FaultTolerantRouter` (replica health tracking,
+    request rescue, priced degradation — same results on a healthy
+    fleet). Pass a list as ``engine_out`` to receive the engine(s)
+    (dispatch counters) for inspection.
     """
     import numpy as np
 
@@ -57,12 +61,13 @@ def generate(cfg, params, prompt_tokens, gen_len: int, *,
     prompts = np.asarray(prompt_tokens)
     reqs = [Request(rid=str(i), prompt=tuple(int(t) for t in prompts[i]),
                     max_new_tokens=gen_len) for i in range(b)]
-    if replicas == 1:
+    if replicas == 1 and not fault_tolerant:
         results = engines[0].run(reqs)
     else:
-        from repro.serve import ReplicaRouter
-        results = ReplicaRouter(engines, policy="round_robin",
-                                max_queue=max(8, b)).run(reqs)
+        from repro.serve import FaultTolerantRouter, ReplicaRouter
+        cls = FaultTolerantRouter if fault_tolerant else ReplicaRouter
+        results = cls(engines, policy="round_robin",
+                      max_queue=max(8, b)).run(reqs)
     if engine_out is not None:
         engine_out.extend(engines)
     import jax.numpy as jnp
@@ -87,6 +92,10 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the round-robin router "
                          "(default 1: no router)")
+    ap.add_argument("--fault-tolerant", action="store_true",
+                    help="route through the health-tracking "
+                         "FaultTolerantRouter (replica quarantine/eject, "
+                         "request rescue, priced degradation)")
     args = ap.parse_args(argv)
 
     from repro.launch.mesh import make_serve_mesh
@@ -104,7 +113,8 @@ def main(argv=None):
     toks = generate(cfg, params, prompts, args.gen,
                     temperature=args.temperature, seed=args.seed,
                     chunk=args.chunk or None, mesh=mesh,
-                    replicas=args.replicas, engine_out=eng_out)
+                    replicas=args.replicas, engine_out=eng_out,
+                    fault_tolerant=args.fault_tolerant)
     dt = time.time() - t0
     eng = eng_out[0]
     shard = f" tp={eng.tp}" if mesh is not None else ""

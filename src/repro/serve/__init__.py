@@ -34,29 +34,54 @@ KV stream plus the per-step activation all-reduce
 single-device path. ``ReplicaRouter`` (``repro.serve.router``) scales
 *traffic* instead: N replicas behind a round-robin / least-loaded
 admission controller with per-replica queues and backpressure.
+
+The fault-tolerance layer rides on top: ``repro.serve.faults`` is the
+seeded deterministic fault injector (``FaultyEngine`` wraps either
+engine and injects step/admission failures on a schedule), and
+``repro.serve.health`` is the consumer — per-replica health state
+machines scored against the planner's per-round budget, request
+rescue by prompt+prefix replay (priced via
+``kv_traffic.rescue_traffic``), deadlines, and priced
+keep/replan/shed degradation behind ``FaultTolerantRouter``.
 """
 
 from repro.serve.decode import make_chunked_decode_step
 from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.faults import (FaultSpec, FaultyEngine, TransientFault,
+                                chaos_schedule, poison_slot)
+from repro.serve.health import (FaultTolerantRouter, HealthConfig,
+                                NoHealthyReplica, ReplicaHealth,
+                                deadline_for, priced_degradation)
 from repro.serve.kv_traffic import (collective_traffic, cow_fork_traffic,
                                     decode_read_traffic, kv_update_traffic,
                                     page_admission_traffic,
-                                    page_gather_traffic)
-from repro.serve.pages import PagePool, paged_cache_pspecs
+                                    page_gather_traffic, rescue_traffic)
+from repro.serve.pages import PagePool, PoolExhausted, paged_cache_pspecs
 from repro.serve.planner import (ChunkPlan, decode_step_hlo,
-                                 kv_read_seconds, plan_chunk_size)
+                                 kv_read_seconds, plan_chunk_size,
+                                 planned_round_seconds)
 from repro.serve.router import QueueFull, ReplicaRouter
 
 __all__ = [
     "ChunkPlan",
+    "FaultSpec",
+    "FaultTolerantRouter",
+    "FaultyEngine",
+    "HealthConfig",
+    "NoHealthyReplica",
     "PagePool",
     "PagedServeEngine",
+    "PoolExhausted",
     "QueueFull",
+    "ReplicaHealth",
     "ReplicaRouter",
     "Request",
     "ServeEngine",
+    "TransientFault",
+    "chaos_schedule",
     "collective_traffic",
     "cow_fork_traffic",
+    "deadline_for",
     "decode_read_traffic",
     "decode_step_hlo",
     "kv_read_seconds",
@@ -66,4 +91,8 @@ __all__ = [
     "page_gather_traffic",
     "paged_cache_pspecs",
     "plan_chunk_size",
+    "planned_round_seconds",
+    "poison_slot",
+    "priced_degradation",
+    "rescue_traffic",
 ]

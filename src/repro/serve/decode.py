@@ -24,7 +24,8 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
                              attn_impl: str | None = None,
                              kv_len: int | None = None,
                              store_flavor: str | None = None,
-                             paged: bool = False):
+                             paged: bool = False,
+                             guard: bool = False):
     """Build the n-token decode chunk: one dispatch, n in-graph steps.
 
     Returns ``step(params, cache, tokens, pos, key) -> (toks, cache, pos)``
@@ -49,13 +50,29 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
     int32 maps each slot's logical pages (repro.serve.pages). The
     cache stays positional argument 1 so the engine's donation hint is
     layout-independent.
+
+    ``guard=True`` appends a per-slot non-finite guard to the return:
+    the step yields ``(toks, cache, pos, ok)`` with ``ok`` a (B,) bool
+    that is False for any slot whose logits went non-finite at *any*
+    token of the chunk. The check is one ``jnp.isfinite`` reduce per
+    in-graph step — jit-compatible, fused into the logits epilogue —
+    and it is per-row, so one slot's NaN never condemns its batchmates
+    (attention/recurrent mixers keep rows independent; see the MoE
+    caveat in ``serve.engine``). Poisoned rows emit token 0 for the
+    rest of the chunk so the self-fed garbage can't index out of the
+    embedding; the serve engine quarantines the request and discards
+    the chunk's tokens. ``guard=False`` (default) keeps the historical
+    3-tuple and a bit-identical graph.
     """
     assert cfg.embed_inputs, "chunked decode needs a token embedding"
     assert n_tokens >= 1
 
     def step(params, cache, tokens, pos, key, block_tables=None):
         def body(carry, _):
-            cache, tok, pos, key = carry
+            if guard:
+                cache, tok, pos, key, ok = carry
+            else:
+                cache, tok, pos, key = carry
             logits, _, new_cache = M.forward(cfg, params, {"tokens": tok},
                                             mode="decode", cache=cache,
                                             pos=pos, attn_impl=attn_impl,
@@ -74,8 +91,20 @@ def make_chunked_decode_step(cfg: ModelConfig, n_tokens: int,
                 nxt = nxt.astype(jnp.int32)
             else:
                 nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            if guard:
+                ok = ok & jnp.all(jnp.isfinite(lg), axis=-1)
+                # a poisoned row's self-fed token is garbage: pin it to 0
+                # so the next embedding lookup stays in range (the chunk's
+                # tokens are discarded at quarantine anyway)
+                nxt = jnp.where(ok, nxt, 0)
+                return (cache, nxt[:, None], pos + 1, key, ok), nxt
             return (cache, nxt[:, None], pos + 1, key), nxt
 
+        if guard:
+            ok0 = jnp.ones((tokens.shape[0],), bool)
+            (cache, _, pos, _, ok), toks = jax.lax.scan(
+                body, (cache, tokens, pos, key, ok0), None, length=n_tokens)
+            return jnp.swapaxes(toks, 0, 1), cache, pos, ok
         (cache, _, pos, _), toks = jax.lax.scan(
             body, (cache, tokens, pos, key), None, length=n_tokens)
         return jnp.swapaxes(toks, 0, 1), cache, pos

@@ -60,11 +60,19 @@ def _named(mesh, pspecs):
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One generation request: prompt token ids and a token budget."""
+    """One generation request: prompt token ids and a token budget.
+
+    ``deadline_s`` is an optional completion budget in seconds
+    *relative to submission* (virtual-clock seconds under the load
+    harness). Engines ignore it; the fault-tolerant router
+    (repro.serve.health) sheds queued requests and cancels active ones
+    once their budget is spent. ``None`` means no deadline.
+    """
 
     rid: str
     prompt: tuple                 # prompt token ids
     max_new_tokens: int
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -100,11 +108,20 @@ class ServeEngine:
                  attn_impl: str | None = None,
                  kv_len: int | None = None,
                  store_flavor: str = "auto",
-                 mesh=None, rules: dict | None = None):
+                 mesh=None, rules: dict | None = None,
+                 nonfinite_guard: bool = True):
         assert cfg.embed_inputs, "serve engine needs a token-id model"
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = float(temperature)
+        # the non-finite guard makes every decode chunk also return a
+        # per-slot isfinite flag (serve.decode guard=): a slot whose
+        # logits went NaN/inf is quarantined — removed from its slot
+        # with its pre-chunk tokens parked on ``self.quarantined`` —
+        # instead of silently self-feeding garbage or poisoning the
+        # batch. One cheap jit-fused reduce per in-graph step.
+        self.nonfinite_guard = bool(nonfinite_guard)
+        self.quarantined: list = []   # (rid, tokens-so-far) pairs
         # attn_impl routes decode attention through the split-KV kernel
         # suite; kv_len is a static occupancy bound for the engine's
         # lifetime (no request may decode past it) — when set, the
@@ -146,6 +163,7 @@ class ServeEngine:
         self.slots: list = [None] * max_slots
         self._tok = np.zeros((max_slots, 1), np.int32)
         self._pos = np.zeros((max_slots,), np.int32)
+        self._last_ok = np.ones((max_slots,), bool)
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
 
@@ -182,6 +200,34 @@ class ServeEngine:
             return cache
         return jax.device_put(cache, _named(self.mesh, pspecs))
 
+    def _make_decode(self):
+        """Jit the chunked decode step for the current ``self.chunk``."""
+        return jax.jit(
+            self._traced(make_chunked_decode_step(
+                self.cfg, self.chunk, self.temperature,
+                attn_impl=self.attn_impl, kv_len=self.kv_len,
+                store_flavor=self.store_flavor,
+                guard=self.nonfinite_guard)),
+            donate_argnums=(1,))
+
+    def set_chunk(self, chunk: int) -> None:
+        """Re-plan the decode chunk size mid-flight (degraded mode).
+
+        Only the chunked decode step is re-jitted — the cache, the
+        slots, and every in-flight stream are untouched, so the next
+        ``step()`` simply decodes ``chunk`` tokens per dispatch. Used
+        by the fault-tolerant router's priced degradation
+        (``repro.serve.health``): a smaller chunk shortens each round
+        (lower per-round latency under deadline pressure) at the cost
+        of amortizing dispatch overhead over fewer tokens. Repeated
+        sizes hit jit's compilation cache.
+        """
+        chunk = max(1, int(chunk))
+        if chunk == self.chunk:
+            return
+        self.chunk = chunk
+        self._decode = self._make_decode()
+
     def _build_state(self):
         """Allocate the cache and jit the per-layout dispatch steps."""
         self.cache = self._shard_cache(
@@ -189,12 +235,7 @@ class ServeEngine:
             M.cache_pspecs(self.cfg, self.rules, self._mesh_sizes,
                            self.max_slots, self.max_len)
             if self.mesh is not None else None)
-        self._decode = jax.jit(
-            self._traced(make_chunked_decode_step(
-                self.cfg, self.chunk, self.temperature,
-                attn_impl=self.attn_impl, kv_len=self.kv_len,
-                store_flavor=self.store_flavor)),
-            donate_argnums=(1,))
+        self._decode = self._make_decode()
         self._insert = jax.jit(self._traced(make_insert_step(self.cfg)),
                                donate_argnums=(0,))
         # jit retraces per prompt length/batch shape on its own — one
@@ -216,9 +257,18 @@ class ServeEngine:
 
     def _dispatch(self, sub):
         """Issue one chunked decode over all slots; returns (B, chunk)."""
-        toks, self.cache, _ = self._decode(
+        out = self._decode(
             self.params, self.cache, jnp.asarray(self._tok),
             jnp.asarray(self._pos), sub)
+        return self._unpack_dispatch(out)
+
+    def _unpack_dispatch(self, out):
+        """Split a decode result into tokens + cache (+ guard flags)."""
+        if self.nonfinite_guard:
+            toks, self.cache, _, ok = out
+            self._last_ok = np.asarray(ok)
+        else:
+            toks, self.cache, _ = out
         return toks
 
     # -- admission ----------------------------------------------------------
@@ -248,6 +298,15 @@ class ServeEngine:
                 f"request {req.rid}: prompt {prompt_len} + "
                 f"{req.max_new_tokens} new tokens exceeds the slot "
                 f"horizon {horizon}")
+        # out-of-vocab ids don't fail loudly downstream: the jitted
+        # embedding gather fills OOB rows with NaN, which poisons the
+        # whole stream (and trips the non-finite guard). Reject at
+        # admission, where the rid is still attached to the cause.
+        if req.prompt and (min(req.prompt) < 0
+                           or max(req.prompt) >= self.cfg.vocab_size):
+            raise ValueError(
+                f"request {req.rid}: prompt ids must be in "
+                f"[0, {self.cfg.vocab_size})")
 
     def admit(self, req: Request, slot: int | None = None) -> int:
         """Prefill one request and insert it into a free slot, in place."""
@@ -298,6 +357,16 @@ class ServeEngine:
             self._tok[i, 0] = tok0[i]
             self._pos[i] = s
 
+    def drain_quarantined(self) -> list:
+        """Return and clear the (rid, tokens-so-far) quarantine list.
+
+        Populated by ``step()`` when the non-finite guard trips; the
+        router (``repro.serve.health``) drains it every round to rescue
+        the streams on a healthy replica by replaying prompt + prefix.
+        """
+        out, self.quarantined = self.quarantined, []
+        return out
+
     def cancel(self, rid: str):
         """Abort an active request; returns its tokens so far, or None.
 
@@ -333,6 +402,16 @@ class ServeEngine:
         toks = np.asarray(toks)
         for i, st in enumerate(self.slots):
             if st is None:
+                continue
+            if not bool(self._last_ok[i]):
+                # non-finite logits this chunk: quarantine the request
+                # (tokens-so-far, pre-chunk — the chunk's output is
+                # garbage) instead of letting it self-feed NaNs. The
+                # slot frees immediately; the router decides whether
+                # the stream is rescued or reported failed.
+                self.quarantined.append(
+                    (st.rid, np.asarray(st.out, np.int32)))
+                self._release_slot(i)
                 continue
             take = min(self.chunk, st.remaining)
             st.out.extend(int(t) for t in toks[i, :take])
@@ -411,6 +490,15 @@ class PagedServeEngine(ServeEngine):
                                page_size=self.page_size,
                                mesh=self.mesh, rules=self.rules)
 
+    def _make_decode(self):
+        return jax.jit(
+            self._traced(make_chunked_decode_step(
+                self.cfg, self.chunk, self.temperature,
+                attn_impl=self.attn_impl, kv_len=self.kv_len,
+                store_flavor=self.store_flavor, paged=True,
+                guard=self.nonfinite_guard)),
+            donate_argnums=(1,))
+
     def _build_state(self):
         cfg, ps = self.cfg, self.page_size
         self.pool = pages_lib.PagePool(self.n_pages, ps)
@@ -424,12 +512,7 @@ class PagedServeEngine(ServeEngine):
             if self.mesh is not None else None)
         self.block_tables = np.full(
             (self.max_slots, self.pages_per_slot), -1, np.int32)
-        self._decode = jax.jit(
-            self._traced(make_chunked_decode_step(
-                cfg, self.chunk, self.temperature,
-                attn_impl=self.attn_impl, kv_len=self.kv_len,
-                store_flavor=self.store_flavor, paged=True)),
-            donate_argnums=(1,))
+        self._decode = self._make_decode()
         self._page_insert = jax.jit(
             self._traced(pages_lib.make_paged_insert_step(cfg, ps)),
             donate_argnums=(0,))
@@ -508,10 +591,10 @@ class PagedServeEngine(ServeEngine):
     def _dispatch(self, sub):
         bt = np.where(self.block_tables < 0, self._scratch,
                       self.block_tables).astype(np.int32)
-        toks, self.cache, _ = self._decode(
+        out = self._decode(
             self.params, self.cache, jnp.asarray(bt),
             jnp.asarray(self._tok), jnp.asarray(self._pos), sub)
-        return toks
+        return self._unpack_dispatch(out)
 
     # -- paged-only surface -------------------------------------------------
     def fork(self, rid: str, new_rid: str,

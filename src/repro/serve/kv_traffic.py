@@ -395,3 +395,36 @@ def page_admission_traffic(cfg: ModelConfig, prompt_len: int, max_len: int,
     if not all(math.isfinite(r["savings_ratio"]) for r in rows):
         raise AssertionError("non-finite admission pricing")
     return rows
+
+
+def rescue_traffic(cfg: ModelConfig, prompt_len: int, prefix_len: int,
+                   max_len: int, *, page_size: int | None = None,
+                   shared_pages: int = 0, machines=None,
+                   flavor: str = "auto") -> list:
+    """Per-machine cost of rescuing one stream by prompt+prefix replay.
+
+    A rescue resubmits an ejected request as a fresh admission whose
+    prompt is the original prompt plus the ``prefix_len`` tokens
+    already emitted — the replay prefill rebuilds exactly the KV rows
+    the dead replica held. The store side is the same WA-priced
+    admission as any other (:func:`page_admission_traffic`): paged
+    rescues pay only the replayed rows' unshared pages (prefix sharing
+    makes a rescue onto a replica that served a sibling prompt nearly
+    free), dense rescues pay the full horizon zero-fill. Returned rows
+    add ``replay_tokens`` and ``rescue_bytes`` (the layout's admission
+    store: ``recycled_bytes`` when paged, ``zero_fill_bytes`` when
+    dense) so the health layer can log a priced rescue decision.
+    """
+    replay = int(prompt_len) + int(prefix_len)
+    if replay > max_len:
+        raise ValueError(
+            f"rescue replay of {replay} tokens exceeds horizon {max_len}")
+    ps = int(page_size) if page_size is not None else int(max_len)
+    rows = page_admission_traffic(cfg, replay, max_len, ps,
+                                  shared_pages=shared_pages,
+                                  machines=machines, flavor=flavor)
+    for r in rows:
+        r["replay_tokens"] = replay
+        r["rescue_bytes"] = r["recycled_bytes"] if page_size is not None \
+            else r["zero_fill_bytes"]
+    return rows

@@ -130,6 +130,16 @@ def dense_kv_bytes(cfg: ModelConfig, max_slots: int, max_len: int) -> int:
     return tot
 
 
+class PoolExhausted(RuntimeError):
+    """Raised by :meth:`PagePool.allocate` when no page can be handed out.
+
+    A ``RuntimeError`` subclass so existing callers keep working; the
+    fault-tolerant serve path (``repro.serve.health``) catches it
+    specifically and treats admission-time exhaustion as a transient,
+    retryable overload signal — pages come back as requests retire.
+    """
+
+
 class PagePool:
     """Host-side physical page allocator with refcounted prefix sharing.
 
@@ -195,7 +205,7 @@ class PagePool:
                 self.refcount[p] = 0
                 self.stats["evictions"] += 1
                 return p
-        raise RuntimeError(
+        raise PoolExhausted(
             f"page pool exhausted ({self.n_pages} pages, none evictable)")
 
     def release(self, pages) -> None:

@@ -297,3 +297,23 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     if cache_key is not None:
         _PLAN_CACHE[cache_key] = plan
     return plan
+
+
+def planned_round_seconds(plan: ChunkPlan, chunk: int | None = None,
+                          dispatch_overhead_s: float = 2e-4,
+                          machine: str | None = None) -> float:
+    """Modeled wall seconds of one decode round at ``chunk`` tokens.
+
+    ``chunk`` in-graph steps at the plan's tier-resolved per-step cost
+    plus one dispatch overhead — the health tracker's latency budget
+    (repro.serve.health) and the fault injector's virtual-clock unit
+    (repro.serve.faults) both come from here, so "slow" is always
+    *slow relative to what the port model predicts for this machine*,
+    not an absolute wall-clock constant. ``machine`` prices the round
+    on another registered machine's column of the plan (default: the
+    plan's own machine).
+    """
+    c = plan.chunk if chunk is None else max(1, int(chunk))
+    t = plan.t_step_seconds if machine is None \
+        else plan.per_machine[machine]
+    return c * t + dispatch_overhead_s

@@ -71,6 +71,17 @@ class ReplicaRouter:
         self._owner: dict = {}           # rid -> replica index
         self.submitted = [0] * len(self.replicas)
         self.completed = [0] * len(self.replicas)
+        # robustness counters (surfaced by stats()): per-replica decode
+        # failures, ``run()`` retry attempts, and requests shed after
+        # the retry budget — attributed to the replica that refused the
+        # final attempt. ``shed_rids`` names every shed request so a
+        # drop is never silent; ``quarantined`` collects streams the
+        # engines' non-finite guard pulled out of their batches.
+        self.failed = [0] * len(self.replicas)
+        self.retries = [0] * len(self.replicas)
+        self.shed = [0] * len(self.replicas)
+        self.shed_rids: list = []
+        self.quarantined: list = []      # (rid, tokens-so-far) pairs
 
     # -- admission ----------------------------------------------------------
     def _active_tokens(self, i: int) -> int:
@@ -99,8 +110,10 @@ class ReplicaRouter:
             raise ValueError(f"duplicate request id {req.rid!r}")
         i = self._pick()
         if len(self.queues[i]) >= self.max_queue:
-            raise QueueFull(
+            err = QueueFull(
                 f"replica {i} queue full ({self.max_queue} waiting)")
+            err.replica = i              # lets run() attribute the shed
+            raise err
         self.queues[i].append(req)
         self._owner[req.rid] = i
         self.submitted[i] += 1
@@ -165,39 +178,127 @@ class ReplicaRouter:
                 self._owner.pop(rid, None)
                 self.completed[i] += 1
             retired.extend(done)
+            for rid, toks in self._drain_quarantined(i, eng):
+                self._owner.pop(rid, None)
+                self._on_quarantined(i, rid, toks)
         return retired
+
+    @staticmethod
+    def _drain_quarantined(i: int, eng) -> list:
+        """Pull the engine's non-finite-guard quarantine list, if any."""
+        drain = getattr(eng, "drain_quarantined", None)
+        return drain() if drain is not None else []
+
+    def _on_quarantined(self, i: int, rid: str, toks) -> None:
+        """A stream the guard pulled from replica ``i``'s batch.
+
+        The base router records it as failed (tokens-so-far kept on
+        ``self.quarantined`` — never silently lost); the
+        fault-tolerant router overrides this to rescue the stream on a
+        healthy replica instead.
+        """
+        self.failed[i] += 1
+        self.quarantined.append((rid, toks))
 
     def busy(self) -> bool:
         """True while any replica has queued or active work."""
         return any(self.queues) or any(
             s is not None for eng in self.replicas for s in eng.slots)
 
-    def run(self, requests: list) -> dict:
+    def _shed(self, req, replica: int, reason: str) -> None:
+        """Drop one request after its retry budget is spent.
+
+        Recorded, never silent: the rid lands on ``shed_rids`` and the
+        per-replica ``shed`` counter (attributed to the replica that
+        refused the final attempt) feeds ``stats()``.
+        """
+        self.shed[replica] += 1
+        self.shed_rids.append(req.rid)
+
+    def run(self, requests: list, *, max_retries: int = 8,
+            backoff_base: int = 1, seed: int = 0,
+            stall_rounds: int = 256) -> dict:
         """Serve a request list to completion: {rid: (n_tokens,) int32}.
 
-        Submits as backpressure allows (a full queue simply waits for
-        the next round), then drains. This is the offline-batch path;
-        the load harness drives ``submit``/``step`` itself to model
-        arrival processes.
+        Submits as backpressure allows, then drains. ``QueueFull`` is
+        retried at most ``max_retries`` times per request with
+        exponential backoff in *rounds* (``backoff_base * 2**attempt``
+        plus seeded jitter — rounds, not wall seconds, so the policy is
+        identical on the virtual clock); a request that exhausts its
+        budget is shed via :meth:`_shed` and reported in ``stats()``
+        rather than retried forever. If ``stall_rounds`` consecutive
+        rounds pass with no completion, no queue movement, no slot
+        progress, and no retry pending, the router raises
+        ``RuntimeError`` instead of spinning — the every-replica-wedged
+        case is loud, not an infinite loop. This is the offline-batch
+        path; the load harness drives ``submit``/``step`` itself to
+        model arrival processes.
         """
+        rng = np.random.default_rng(seed)
         pending = deque(requests)
         results: dict = {}
+        attempts: dict = {}              # rid -> failed submit attempts
+        not_before: dict = {}            # rid -> earliest retry round
+        round_idx = 0
+        stalled = 0
+        last_sig = None
         while pending or self.busy():
+            waiting = deque()
             while pending:
+                req = pending.popleft()
+                if not_before.get(req.rid, 0) > round_idx:
+                    waiting.append(req)
+                    continue
                 try:
-                    self.submit(pending[0])
-                except QueueFull:
-                    break
-                pending.popleft()
+                    self.submit(req)
+                except QueueFull as e:
+                    n = attempts.get(req.rid, 0) + 1
+                    attempts[req.rid] = n
+                    replica = getattr(e, "replica",
+                                      len(self.replicas) - 1)
+                    if n > max_retries:
+                        self._shed(req, replica, str(e))
+                        continue
+                    self.retries[replica] += 1
+                    delay = backoff_base * (2 ** (n - 1))
+                    delay += int(rng.integers(0, delay + 1))  # jitter
+                    not_before[req.rid] = round_idx + delay
+                    waiting.append(req)
+            pending = waiting
             for rid, toks in self.step():
                 results[rid] = toks
+            round_idx += 1
+            sig = (len(results), sum(self.completed), sum(self.shed),
+                   tuple(len(q) for q in self.queues),
+                   sum(s.remaining for eng in self.replicas
+                       for s in eng.slots if s is not None))
+            backing_off = any(r > round_idx for r in not_before.values())
+            if sig == last_sig and not backing_off:
+                stalled += 1
+                if stalled >= stall_rounds:
+                    raise RuntimeError(
+                        f"router made no progress for {stalled} rounds "
+                        f"({len(pending)} pending, "
+                        f"{sum(len(q) for q in self.queues)} queued)")
+            else:
+                stalled = 0
+            last_sig = sig
         return results
 
     def stats(self) -> list:
-        """Per-replica counters: queued/active/submitted/completed."""
+        """Per-replica counters: queue/progress plus robustness tallies.
+
+        ``failed`` counts decode-round faults, ``retries`` the
+        backoff-retried submits this replica refused, ``shed`` the
+        requests dropped after the retry budget — all per replica, so
+        a sick replica is visible in one row.
+        """
         return [{"replica": i,
                  "queued": len(self.queues[i]),
                  "active": sum(s is not None for s in eng.slots),
                  "submitted": self.submitted[i],
-                 "completed": self.completed[i]}
+                 "completed": self.completed[i],
+                 "failed": self.failed[i],
+                 "retries": self.retries[i],
+                 "shed": self.shed[i]}
                 for i, eng in enumerate(self.replicas)]

@@ -43,6 +43,85 @@ def test_checkpoint_async_then_wait(tmp_path):
     assert ck.latest_step() == 1
 
 
+def _crashing_put(fail_at):
+    """A ``_put`` that dies on its ``fail_at``-th file write."""
+    calls = {"n": 0}
+    orig = Checkpointer._put
+
+    def put(path, writer):
+        if calls["n"] == fail_at:
+            raise RuntimeError("simulated disk death")
+        calls["n"] += 1
+        orig(path, writer)
+    return put
+
+
+@pytest.mark.parametrize("fail_at", [0, 1, 2, 3])
+def test_mid_write_crash_never_tears_snapshot(tmp_path, fail_at):
+    # a step writes 2 leaves + manifest + COMMIT = 4 files; failing at
+    # each index simulates dying during leaves, manifest, or COMMIT
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1), block=True)
+    ck._put = _crashing_put(fail_at)
+    ck.save(2, _tree(2))
+    with pytest.raises(RuntimeError, match="background checkpoint"):
+        ck.wait()
+    assert ck.all_steps() == [1]          # torn write invisible
+    step, got = ck.restore_latest(_tree(0))
+    assert step == 1
+    np.testing.assert_array_equal(got["a"], _tree(1)["a"])
+    del ck._put                           # disk "recovers"
+    ck.save(2, _tree(2), block=True)      # clobbers the leftover .tmp
+    assert ck.all_steps() == [1, 2]
+
+
+def test_crash_between_commit_and_rename(tmp_path, monkeypatch):
+    import repro.checkpoint.checkpointer as C
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1), block=True)
+    orig = C.os.replace
+
+    def replace(src, dst):
+        if src.endswith(".tmp"):          # the final directory rename
+            raise RuntimeError("killed before rename")
+        orig(src, dst)
+    monkeypatch.setattr(C.os, "replace", replace)
+    ck.save(2, _tree(2))
+    with pytest.raises(RuntimeError, match="background checkpoint"):
+        ck.wait()
+    # the .tmp dir carries COMMIT, yet discovery must not trust it
+    assert os.path.exists(
+        os.path.join(str(tmp_path), "step_00000002.tmp", "COMMIT"))
+    assert ck.all_steps() == [1]
+    monkeypatch.undo()
+    ck.save(2, _tree(2), block=True)
+    assert ck.all_steps() == [1, 2]
+
+
+def test_wait_reraises_and_clears_background_failure(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+
+    def boom(step, leaves, treedef_str):
+        raise ValueError("flaky filesystem")
+    ck._write = boom
+    ck.save(1, _tree(1))
+    with pytest.raises(RuntimeError, match="background checkpoint") as ei:
+        ck.wait()
+    assert isinstance(ei.value.__cause__, ValueError)
+    ck.wait()                             # error consumed, not sticky
+
+
+def test_discovery_ignores_non_snapshot_dirs(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _tree(3), block=True)
+    for name in ("step_abc", "step_00000004.tmp", "stepX"):
+        os.makedirs(os.path.join(str(tmp_path), name))
+        with open(os.path.join(str(tmp_path), name, "COMMIT"), "wb") as f:
+            f.write(b"ok")
+    os.makedirs(os.path.join(str(tmp_path), "step_00000005"))  # no COMMIT
+    assert ck.all_steps() == [3]
+
+
 def test_restart_manager_recovers(tmp_path):
     ck = Checkpointer(str(tmp_path))
     rm = RestartManager(ck, ckpt_every=2)

@@ -1,0 +1,168 @@
+"""Fault injector: schedules, engine-surface conformance, and the
+in-graph non-finite guard's quarantine path on both cache layouts.
+
+The injector is the test harness for the whole fault-tolerance layer,
+so its own determinism is load-bearing: identical seeds must yield
+identical schedules, injected step faults must fire exactly at their
+indices, and NaN poison must be caught by the engines' guard (and
+scrubbed afterwards so recycled pages can't re-poison later streams).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serve import (FaultSpec, FaultyEngine, PagedServeEngine,
+                         PoolExhausted, Request, ServeEngine,
+                         TransientFault, chaos_schedule)
+from repro.serve.faults import poison_slot, scrub_nonfinite
+
+SLOTS, MAX_LEN, CHUNK = 2, 32, 2
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("xlstm-125m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _req(rid, budget=6, base=1):
+    return Request(rid, tuple(range(base, base + 4)), budget)
+
+
+def _dense(cfg, params, **kw):
+    return ServeEngine(cfg, params, max_slots=SLOTS, max_len=MAX_LEN,
+                       chunk=CHUNK, **kw)
+
+
+def _paged(cfg, params, **kw):
+    return PagedServeEngine(cfg, params, max_slots=SLOTS, max_len=MAX_LEN,
+                            chunk=CHUNK, page_size=4, **kw)
+
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor_strike", frozenset({1}))
+
+
+def test_chaos_schedule_is_seed_deterministic():
+    rates = {"stuck": 0.3, "nonfinite": 0.2, "admit_error": 0.25}
+    a = chaos_schedule(3, 40, rates, slots=SLOTS)
+    b = chaos_schedule(3, 40, rates, slots=SLOTS)
+    assert a == b
+    assert a != chaos_schedule(4, 40, rates, slots=SLOTS)
+    kinds = {f.kind for f in a}
+    assert kinds <= {"stuck", "nonfinite", "admit_error"}
+    # nonfinite targets round-robin over slots
+    slots = [f.slot for f in a if f.kind == "nonfinite"]
+    assert all(0 <= s < SLOTS for s in slots)
+
+
+def test_step_error_and_stuck_and_slow(cfg, params):
+    eng = FaultyEngine(
+        _dense(cfg, params),
+        [FaultSpec("step_error", frozenset({0})),
+         FaultSpec("stuck", frozenset({1})),
+         FaultSpec("slow", frozenset({2}), factor=7.0)],
+        budget_s=1e-3)
+    eng.admit(_req("a"))
+    with pytest.raises(TransientFault):
+        eng.step()
+    before = list(eng.slots[0].out)
+    assert eng.step() == []                       # stuck: no progress
+    assert eng.slots[0].out == before
+    assert eng.last_step_seconds == pytest.approx(50e-3)
+    eng.step()                                    # slow: progresses
+    assert len(eng.slots[0].out) > len(before)
+    assert eng.last_step_seconds == pytest.approx(7e-3)
+    eng.step()                                    # healthy again
+    assert eng.last_step_seconds == pytest.approx(1e-3)
+    assert eng.injected == {"step_error": 1, "stuck": 1, "slow": 1}
+
+
+def test_admission_faults(cfg, params):
+    eng = FaultyEngine(
+        _dense(cfg, params),
+        [FaultSpec("admit_error", frozenset({0})),
+         FaultSpec("pool_exhausted", frozenset({1}))],
+        budget_s=1e-3)
+    with pytest.raises(TransientFault):
+        eng.admit(_req("a"))
+    with pytest.raises(PoolExhausted):
+        eng.admit(_req("a"))
+    assert eng.admit(_req("a")) == 0              # third attempt lands
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_nonfinite_poison_quarantines_only_victim(cfg, params, layout):
+    mk = _dense if layout == "dense" else _paged
+    eng = mk(cfg, params)
+    eng.admit(_req("victim", base=1))
+    eng.admit(_req("bystander", base=2))
+    poison_slot(eng, 0)
+    retired = eng.step()
+    assert retired == []
+    q = eng.drain_quarantined()
+    assert [rid for rid, _ in q] == ["victim"]
+    assert eng.slots[0] is None                   # slot freed
+    assert eng.slots[1] is not None               # batchmate unharmed
+    scrub_nonfinite(eng)
+    # bystander must finish with a fully finite stream
+    out = {}
+    for _ in range(8):
+        out.update({r: t for r, t in eng.step()})
+        if all(s is None for s in eng.slots):
+            break
+    assert "bystander" in out
+
+
+def test_scrub_keeps_healthy_rows_bit_exact(cfg, params):
+    eng = _dense(cfg, params)
+    eng.admit(_req("a", base=1))
+    eng.admit(_req("b", base=2))
+    healthy = [np.asarray(leaf).copy()
+               for leaf in jax.tree.leaves(eng.cache)]
+    poison_slot(eng, 0)
+    scrub_nonfinite(eng)
+    for before, after in zip(healthy, jax.tree.leaves(eng.cache)):
+        a = np.asarray(after)
+        assert np.isfinite(a[np.isfinite(a)]).all()
+        if a.ndim >= 2 and a.shape[1] == SLOTS:   # slot-batched leaf
+            np.testing.assert_array_equal(before[:, 1], a[:, 1])
+
+
+def test_faulty_engine_delegates_surface(cfg, params):
+    inner = _dense(cfg, params)
+    eng = FaultyEngine(inner, [], budget_s=1e-3)
+    assert eng.max_slots == SLOTS and eng.chunk == CHUNK
+    eng.admit(_req("a"))
+    assert eng.free_slots() == [1]
+    assert eng.cancel("a") is not None
+    assert eng.free_slots() == [0, 1]
+    eng.set_chunk(3)                              # delegated mutator
+    assert inner.chunk == 3
+
+
+def test_faultless_wrapper_streams_identical(cfg, params):
+    reqs = [_req(f"r{i}", base=i + 1) for i in range(3)]
+    plain = _dense(cfg, params).run(list(reqs))
+    wrapped = FaultyEngine(_dense(cfg, params), [], budget_s=1e-3)
+    got = {}
+    for r in reqs[:SLOTS]:
+        wrapped.admit(r)
+    pending = list(reqs[SLOTS:])
+    for _ in range(32):
+        for rid, toks in wrapped.step():
+            got[rid] = toks
+        while pending and wrapped.free_slots():
+            wrapped.admit(pending.pop(0))
+        if not pending and all(s is None for s in wrapped.slots):
+            break
+    for r in reqs:
+        np.testing.assert_array_equal(got[r.rid], plain[r.rid])

@@ -1,0 +1,417 @@
+"""Health state machine, deadlines, priced degradation, and the
+fault-tolerant router's rescue guarantees.
+
+Mechanics (state transitions, deadline shed/cancel, retry/backoff
+bounds) run against a no-jax virtual engine whose token stream is a
+pure function of position — so a rescued replay provably continues the
+stream. The rescue-identity integration test and the property-based
+chaos test then drive *real* engines (dense and paged) through seeded
+fault schedules and pin completed streams against a fault-free
+baseline — byte for byte on the scan engine, where decode bit-exactly
+continues the prefill recurrence; length plus pre-interruption prefix
+on the paged attention engine, whose prefill/decode reduction orders
+can resolve a greedy near-tie differently after a replay boundary
+(see ``_check_streams``) — with conservation checked per example.
+
+Runs under real hypothesis or the deterministic stub
+(tests/_hypothesis_stub.py); conftest tags each test with the engine
+that drove it.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serve import (FaultSpec, FaultTolerantRouter, FaultyEngine,
+                         HealthConfig, NoHealthyReplica, PagedServeEngine,
+                         ReplicaHealth, ReplicaRouter, Request, ServeEngine,
+                         chaos_schedule, deadline_for, priced_degradation)
+from repro.serve.planner import ChunkPlan
+
+SLOTS, MAX_LEN, CHUNK = 2, 48, 2
+BUDGET = 1e-3
+
+
+class VirtualEngine:
+    """No-jax slot engine whose k-th emitted token *is* its position.
+
+    ``token = len(prompt) + k`` makes the stream a pure function of
+    (prompt length, index) — replaying prompt+prefix continues it
+    exactly, which is the property request rescue relies on.
+    """
+
+    paged = False
+
+    def __init__(self, n_slots=SLOTS, budget_s=BUDGET):
+        self.slots = [None] * n_slots
+        self.max_slots = n_slots
+        self.budget_s = budget_s
+        self.last_step_seconds = budget_s
+        self.chunk = 1
+        # rescue pricing reads the model geometry and horizon
+        self.cfg = get_smoke_config("xlstm-125m")
+        self.max_len = 64
+
+    def free_slots(self):
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self, req, slot=None):
+        slot = self.free_slots()[0] if slot is None else slot
+
+        class _S:
+            pass
+
+        s = _S()
+        s.rid, s.remaining, s.out = req.rid, req.max_new_tokens, []
+        s.pos = len(req.prompt)
+        self.slots[slot] = s
+        return slot
+
+    def step(self):
+        retired = []
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.out.append(s.pos)
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining <= 0:
+                retired.append((s.rid, np.asarray(s.out, np.int32)))
+                self.slots[i] = None
+        return retired
+
+    def cancel(self, rid):
+        for i, s in enumerate(self.slots):
+            if s is not None and s.rid == rid:
+                self.slots[i] = None
+                return np.asarray(s.out, np.int32)
+        return None
+
+
+def _req(rid, budget=4, plen=3, deadline_s=None):
+    return Request(rid, tuple(range(1, 1 + plen)), budget,
+                   deadline_s=deadline_s)
+
+
+def _plan(chunk=4, t=1e-3):
+    return ChunkPlan(chunk=chunk, machine="neoverse_v2",
+                     t_step_seconds=t, per_machine={"neoverse_v2": t})
+
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+def test_health_state_machine_walk():
+    h = ReplicaHealth(HealthConfig(fail_threshold=2, eject_threshold=3,
+                                   cooldown_rounds=2, probe_successes=2))
+    assert h.state == "healthy" and h.admissible()
+    h.strike(1)
+    assert h.state == "healthy"          # one strike: still healthy
+    h.success(2)
+    assert h.strikes == 0                # consecutive scoring resets
+    h.strike(3)
+    assert not h.strike(4)               # second consecutive: quarantine
+    assert h.state == "quarantined" and not h.admissible()
+    assert h.steppable()                 # draining, not dead
+    assert h.strike(5)                   # third: eject (caller rescues)
+    assert h.state == "ejected" and not h.steppable()
+    h.tick(6)
+    assert h.state == "ejected"          # cooldown not yet elapsed
+    h.tick(7)
+    assert h.state == "probing" and h.admissible()
+    h.success(8)
+    h.success(9)
+    assert h.state == "healthy"
+    # probing failure re-ejects immediately
+    h2 = ReplicaHealth(HealthConfig(cooldown_rounds=1))
+    h2.state = "probing"
+    assert h2.strike(1) and h2.state == "ejected"
+
+
+def test_quarantine_readmits_on_success():
+    h = ReplicaHealth(HealthConfig(fail_threshold=1, eject_threshold=9))
+    h.strike(1)
+    assert h.state == "quarantined"
+    h.success(2)
+    assert h.state == "healthy" and h.strikes == 0
+
+
+# ---------------------------------------------------------------------------
+# deadlines and priced degradation
+# ---------------------------------------------------------------------------
+
+def test_deadline_for_scales_with_budget_and_chunk():
+    plan = _plan(chunk=4, t=1e-3)
+    d1 = deadline_for(plan, 8, slack=2.0)          # 2 rounds
+    d2 = deadline_for(plan, 16, slack=2.0)         # 4 rounds
+    assert d2 == pytest.approx(2 * d1)
+    assert deadline_for(plan, 8, chunk=2, slack=2.0) != d1
+
+
+def test_priced_degradation_choices():
+    plan = _plan(chunk=4, t=1e-3)
+    # no deadline: keep wins (fewer dispatch overheads per token)
+    d = priced_degradation(plan, 4, SLOTS, 1, 16)
+    assert d["choice"] == "keep"
+    assert set(d["options"]) == {"keep", "replan"}
+    assert all(o["drain_s"] >= 0 for o in d["options"].values())
+    # per-round deadline rules keep out, half-chunk still fits: replan
+    d = priced_degradation(plan, 4, SLOTS, 1, 16, deadline_s=3e-3)
+    assert d["choice"] == "replan" and d["chunk"] == 2
+    # nothing fits: shed
+    d = priced_degradation(plan, 4, SLOTS, 1, 16, deadline_s=1e-4)
+    assert d["choice"] == "shed"
+    # chunk=1 cannot halve: single candidate
+    d = priced_degradation(plan, 1, SLOTS, 1, 16)
+    assert list(d["options"]) == ["keep"]
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant router on the virtual engine (no jax)
+# ---------------------------------------------------------------------------
+
+def _vrouter(n=2, **kw):
+    return FaultTolerantRouter([VirtualEngine() for _ in range(n)], **kw)
+
+
+def test_deadline_shed_and_cancel_on_virtual_clock():
+    rt = _vrouter(n=1, max_queue=4)
+    rt.submit(_req("slow", budget=10, deadline_s=3.5 * BUDGET))
+    rt.submit(_req("slow2", budget=10, deadline_s=3.5 * BUDGET))
+    rt.submit(_req("late", budget=2, deadline_s=0.5 * BUDGET))
+    done = {}
+    for _ in range(12):
+        done.update(dict(rt.step()))
+    # 'late' never reached a slot before its 0.5-round budget passed
+    assert rt.deadline_shed == 1
+    # the active 10-token streams blew their 3.5-round budgets mid-decode
+    assert rt.deadline_cancelled == 2
+    assert not done
+    kinds = [e["kind"] for e in rt.drain_events()]
+    assert kinds.count("deadline_shed") == 1
+    assert kinds.count("deadline_cancel") == 2
+
+
+def test_no_admissible_replica_raises_queue_full_subclass():
+    rt = _vrouter(n=2)
+    for h in rt.health:
+        h.state = "ejected"
+    with pytest.raises(NoHealthyReplica):
+        rt.submit(_req("a"))
+
+
+def test_eject_rescues_and_stream_continues_exactly():
+    cfg = HealthConfig(fail_threshold=2, eject_threshold=3,
+                       latency_factor=10.0, cooldown_rounds=50)
+    e0 = FaultyEngine(VirtualEngine(),
+                      [FaultSpec("stuck", frozenset(range(1, 60)))],
+                      budget_s=BUDGET)
+    e1 = FaultyEngine(VirtualEngine(), [], budget_s=BUDGET)
+    rt = FaultTolerantRouter([e0, e1], policy="round_robin",
+                             max_queue=8, health=cfg)
+    rt.submit(_req("a", budget=6, plen=3))    # round_robin -> replica 0
+    rt.submit(_req("b", budget=6, plen=5))    # -> replica 1
+    done = {}
+    for _ in range(40):
+        done.update(dict(rt.step()))
+        if len(done) == 2:
+            break
+    assert rt.health[0].state == "ejected"
+    assert rt.rescued == 1
+    # both streams are exactly the position sequence — the rescued one
+    # included, despite moving replicas mid-flight
+    np.testing.assert_array_equal(done["a"], np.arange(3, 9))
+    np.testing.assert_array_equal(done["b"], np.arange(5, 11))
+    assert {e["kind"] for e in rt.drain_events()} >= {
+        "rescue", "rescued_complete"}
+    states = [s["health"] for s in rt.stats()]
+    assert states == ["ejected", "healthy"]
+    assert rt.rescue_log and rt.rescue_log[0]["rid"] == "a"
+    rows = rt.rescue_log[0]["rows"]
+    assert rows and all(r["replay_tokens"] == 4 for r in rows)
+    # recurrent xlstm has no per-token KV rows: priced, and priced zero
+    assert all(r["rescue_bytes"] >= 0 for r in rows)
+
+
+def test_run_bounded_retries_shed_and_stall_guard():
+    # every queue wedged forever: run() must shed (bounded retries) and
+    # then stop loudly instead of spinning
+    class Wedged(VirtualEngine):
+        def step(self):
+            return []                    # admits, never progresses
+
+    rt = ReplicaRouter([Wedged(n_slots=1)], max_queue=1)
+    reqs = [_req(f"r{i}", budget=2) for i in range(4)]
+    with pytest.raises(RuntimeError, match="no progress"):
+        rt.run(reqs, max_retries=2, stall_rounds=16)
+    st = rt.stats()
+    assert sum(s["shed"] for s in st) == len(rt.shed_rids) >= 1
+    assert sum(s["retries"] for s in st) >= 1
+    assert set(rt.shed_rids).isdisjoint({"r0"})  # r0 was admitted
+
+
+def test_cancel_then_resubmit_queued_and_active():
+    # regression: cancel must release the rid for resubmission
+    rt = ReplicaRouter([VirtualEngine(n_slots=1)], max_queue=4)
+    rt.submit(_req("live", budget=5))
+    rt.submit(_req("waiting", budget=5))
+    rt.step()                            # live active, waiting queued
+    assert rt.cancel("waiting") is not None     # queued: empty tokens
+    assert rt.submit(_req("waiting", budget=5)) == 0   # rid reusable
+    assert rt.cancel("live") is not None        # active: tokens so far
+    assert rt.submit(_req("live", budget=5)) == 0
+    results = rt.run([])                 # drains the resubmissions
+    assert set(results) == {"live", "waiting"}
+    assert all(len(t) == 5 for t in results.values())
+    assert not rt.busy()
+
+
+# ---------------------------------------------------------------------------
+# real engines: rescue identity + property-based chaos schedules
+# ---------------------------------------------------------------------------
+
+# plain cached helpers instead of pytest fixtures: @given-wrapped tests
+# (stub or real) cannot take fixture parameters through the wrapper
+@functools.lru_cache(maxsize=None)
+def _cfg(arch):
+    return get_smoke_config(arch)
+
+
+@functools.lru_cache(maxsize=None)
+def _params(arch):
+    return M.init_params(_cfg(arch), jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet(layout):
+    """Two long-lived inner engines per layout (compile once).
+
+    Chaos examples wrap them in fresh FaultyEngine/router shells;
+    every example drains completely, so reuse only carries the paged
+    pool's prefix index across examples (bit-exact by design).
+    """
+    if layout == "dense":
+        def mk():
+            return ServeEngine(_cfg("xlstm-125m"), _params("xlstm-125m"),
+                               max_slots=SLOTS, max_len=MAX_LEN,
+                               chunk=CHUNK, seed=0)
+    else:
+        def mk():                            # attention: real paged KV
+            return PagedServeEngine(_cfg("yi-9b"), _params("yi-9b"),
+                                    max_slots=SLOTS, max_len=MAX_LEN,
+                                    chunk=CHUNK, seed=0, page_size=4)
+    return mk(), mk()
+
+
+_REQS = [Request(f"c{i}", tuple(range(2 + i, 8 + i)), 3 + (i % 4))
+         for i in range(6)]
+
+
+def _first_rescue_prefix(rt):
+    """rid -> prefix length at its *first* rescue (pre-fault tokens)."""
+    first = {}
+    for r in rt.rescue_log:
+        first.setdefault(r["rid"], r["prefix"])
+    return first
+
+
+def _check_streams(layout, rt, results, base):
+    """Stream identity vs. the fault-free baseline, per cache layout.
+
+    The scan engine's decode *is* its prefill recurrence continued, so
+    a rescue replay is bit-identical end to end — assert full byte
+    equality. Attention prefill and single-token decode reduce in
+    different orders, so a greedy near-tie can resolve differently
+    after a replay boundary (both argmaxes are legitimate); there the
+    exact guarantees are length and the pre-interruption prefix, plus
+    full identity for streams that were never interrupted.
+    """
+    first = _first_rescue_prefix(rt)
+    for rid, toks in results.items():
+        assert len(toks) == len(base[rid])
+        k = first.get(rid)
+        if layout == "dense" or k is None:
+            np.testing.assert_array_equal(toks, base[rid])
+        else:
+            np.testing.assert_array_equal(toks[:k], base[rid][:k])
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline(layout):
+    """Fault-free streams for _REQS on the shared fleet."""
+    rt = FaultTolerantRouter(
+        [FaultyEngine(e, [], budget_s=BUDGET) for e in _fleet(layout)],
+        policy="least_loaded", max_queue=8)
+    out = rt.run(list(_REQS))
+    assert len(out) == len(_REQS)
+    return out
+
+
+def _run_chaos(layout, schedule0, schedule1):
+    inner = _fleet(layout)
+    rt = FaultTolerantRouter(
+        [FaultyEngine(inner[0], schedule0, budget_s=BUDGET),
+         FaultyEngine(inner[1], schedule1, budget_s=BUDGET)],
+        policy="least_loaded", max_queue=8,
+        health=HealthConfig(fail_threshold=2, eject_threshold=3,
+                            cooldown_rounds=2))
+    results = rt.run(list(_REQS))
+    return rt, results
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_rescue_identity_on_real_engines(layout):
+    base = _baseline(layout)
+    rt, results = _run_chaos(
+        layout,
+        [FaultSpec("stuck", frozenset(range(1, 8)))],
+        [FaultSpec("nonfinite", frozenset({2}), slot=0)])
+    assert rt.rescued >= 1
+    assert set(results) == set(base)     # nothing lost, nothing shed
+    _check_streams(layout, rt, results, base)
+
+
+_RATES = {"step_error": 0.06, "stuck": 0.08, "slow": 0.05,
+          "nonfinite": 0.05, "admit_error": 0.08, "pool_exhausted": 0.04}
+
+
+# the stub's @given wrapper hides named args from pytest, so the
+# dense/paged split is two thin test functions instead of parametrize
+@given(st.integers(0, 10 ** 6))
+def test_chaos_property_dense(seed):
+    """Property: chaos conservation + identity on the dense engine."""
+    _chaos_property("dense", seed)
+
+
+@given(st.integers(0, 10 ** 6))
+def test_chaos_property_paged(seed):
+    """Property: chaos conservation + identity on the paged engine."""
+    _chaos_property("paged", seed)
+
+
+def _chaos_property(layout, seed):
+    """Random seeded chaos schedules: every request is accounted for
+    and every completed stream equals its fault-free baseline."""
+    base = _baseline(layout)
+    rt, results = _run_chaos(
+        layout,
+        chaos_schedule(seed, 20, _RATES, slots=SLOTS),
+        chaos_schedule(seed + 1, 20, _RATES, slots=SLOTS))
+    completed = set(results)
+    shed = set(rt.shed_rids)
+    assert completed.isdisjoint(shed)
+    assert completed | shed == {r.rid for r in _REQS}, \
+        "request silently lost under chaos"
+    assert not rt.quarantined            # rescued, never parked
+    _check_streams(layout, rt, results, base)
+    for eng in rt.replicas:              # examples must drain fully
+        assert all(s is None for s in eng.slots)
+        if getattr(eng, "paged", False):
+            eng.inner.check_pool()

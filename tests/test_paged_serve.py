@@ -77,9 +77,13 @@ def _engines():
 
 
 # a small closed set of prompts: repeats trigger prefix sharing, jit
-# retraces stay bounded by the distinct lengths
+# retraces stay bounded by the distinct lengths. Ids must stay inside
+# the smoke vocab (512): OOB ids NaN-fill the embedding gather, which
+# used to make BOTH engines emit all-NaN logits (greedy argmax -> 0 on
+# each, so the differential held vacuously); admission now rejects
+# them and the serve guard quarantines any stream that slips through.
 _PROMPT_RNG = np.random.default_rng(42)
-PROMPTS = [tuple(int(t) for t in _PROMPT_RNG.integers(0, 1000, n))
+PROMPTS = [tuple(int(t) for t in _PROMPT_RNG.integers(0, 512, n))
            for n in (3, 4, 6, 8, 8, 9)]
 
 

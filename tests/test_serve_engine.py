@@ -224,3 +224,10 @@ def test_zero_and_one_token_budgets():
         eng2.admit(Request("z", tuple(prompts[0]), 0))
     with pytest.raises(ValueError, match="horizon"):
         eng2.admit(Request("h", tuple(range(12)), 8))
+    # out-of-vocab ids are rejected at admission: the jitted embedding
+    # gather NaN-fills OOB rows, silently poisoning the whole stream
+    with pytest.raises(ValueError, match="prompt ids"):
+        eng2.admit(Request("v", (1, cfg.vocab_size, 2), 2))
+    with pytest.raises(ValueError, match="prompt ids"):
+        eng2.admit(Request("n", (-1, 2, 3), 2))
+    assert eng2.free_slots() == [0]            # nothing half-admitted
