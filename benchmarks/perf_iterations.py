@@ -5,7 +5,11 @@ paper-representative), each re-lowered+re-analysed per iteration.
 Run in a fresh process (needs 512 placeholder devices):
   PYTHONPATH=src python -m benchmarks.perf_iterations [--cell H1|H2|H3|H4]
 
-Results land in results/perf/<tag>.json; summarize with --report.
+Results land in results/perf/<tag>.json; summarize with --report, or
+emit the whole hillclimb as one machine-readable artifact with
+``--trajectory BENCH_perf_trajectory.json`` (the CI perf-trajectory job
+uploads exactly that file: per-cell iteration sequences with their
+roofline terms and the bound-term delta vs each cell's base).
 """
 
 import os
@@ -72,18 +76,30 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="all")
     ap.add_argument("--report", action="store_true")
+    ap.add_argument("--trajectory", default="",
+                    help="after running the selected cells, write the "
+                         "aggregated hillclimb trajectory (every "
+                         "results/perf/*.json, grouped per cell, with "
+                         "bound-term deltas vs the cell base) to this "
+                         "JSON path — the BENCH_*.json CI artifact")
     args = ap.parse_args()
 
     if args.report:
         report()
         return
+    run_cells(args.cell)
+    if args.trajectory:
+        write_trajectory(args.trajectory)
 
+
+def run_cells(cell: str):
+    """Run the hypothesis cells selected by ``cell`` ('all' or H1..H4)."""
     from repro.configs import get_config
     from repro.configs.base import SHAPES
     from repro.optim.adamw import OptConfig
 
     # ---- H1: yi-9b train_4k (paper-representative, memory-bound) ----
-    if args.cell in ("all", "H1"):
+    if cell in ("all", "H1"):
         cfg = get_config("yi-9b")
         base = run("H1_base", arch="yi-9b", shape_name="train_4k",
                    multi_pod=False, cfg=cfg)
@@ -98,7 +114,7 @@ def main():
             cfg=dataclasses.replace(cfg, q_chunk=2048, kv_chunk=4096))
 
     # ---- H2: qwen1.5-110b decode_32k (most collective-bound) ----
-    if args.cell in ("all", "H2"):
+    if cell in ("all", "H2"):
         cfg = get_config("qwen1.5-110b")
         run("H2_base", arch="qwen1.5-110b", shape_name="decode_32k",
             multi_pod=False, cfg=cfg, serve_variant="gather")
@@ -117,7 +133,7 @@ def main():
             serve_variant="resident2d")
 
     # ---- H3: jamba train_4k (worst peak fraction, WA-heavy) ----
-    if args.cell in ("all", "H3"):
+    if cell in ("all", "H3"):
         cfg = get_config("jamba-v0.1-52b")
         run("H3_base_unfused", arch="jamba-v0.1-52b", shape_name="train_4k",
             multi_pod=False, cfg=dataclasses.replace(cfg, ssm_fuse=False))
@@ -134,13 +150,49 @@ def main():
                                     moe_group_size=2048))
 
     # ---- H4: qwen3-moe train fit enabler (int8 moments) ----
-    if args.cell in ("all", "H4"):
+    if cell in ("all", "H4"):
         cfg = get_config("qwen3-moe-235b-a22b")
         run("H4_base", arch="qwen3-moe-235b-a22b", shape_name="train_4k",
             multi_pod=False, cfg=cfg)
         run("H4_it1_int8_moments", arch="qwen3-moe-235b-a22b",
             shape_name="train_4k", multi_pod=False, cfg=cfg,
             oc=OptConfig(moments_dtype="int8"))
+
+
+def write_trajectory(path: str) -> dict:
+    """Aggregate every results/perf/*.json into one trajectory artifact.
+
+    Grouped per hypothesis cell (tag prefix up to the first ``_``), each
+    iteration carries its roofline terms plus ``bound_vs_base`` — the
+    bound-term ratio against the cell's base record — so the artifact
+    answers "did the hillclimb move the bound?" without re-running
+    anything. Written as versioned JSON; returns the payload.
+    """
+    import glob
+    cells: dict = {}
+    for rec_path in sorted(glob.glob(os.path.join(OUT, "*.json"))):
+        with open(rec_path) as f:
+            rec = json.load(f)
+        t = rec.get("_terms")
+        if not t:
+            continue
+        tag = os.path.basename(rec_path)[:-5]
+        cells.setdefault(tag.split("_", 1)[0], []).append(
+            {"tag": tag, "terms": t})
+    for iters in cells.values():
+        base = next((i for i in iters if "base" in i["tag"]), iters[0])
+        b = max(base["terms"]["bound_s"], 1e-12)
+        for i in iters:
+            i["bound_vs_base"] = i["terms"]["bound_s"] / b
+    payload = {"version": 1, "format": "repro-perf-trajectory",
+               "n_cells": len(cells),
+               "n_iterations": sum(len(v) for v in cells.values()),
+               "cells": cells}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"trajectory: {payload['n_iterations']} iterations over "
+          f"{payload['n_cells']} cells -> {path}")
+    return payload
 
 
 def report():

@@ -15,7 +15,7 @@ import traceback
 MODULES = ("table1_machines", "table2_ports", "table3_instructions",
            "fig2_unitmix", "fig3_rpe", "fig4_wa", "fig4b_ntstore",
            "fig5_memladder", "fig6_serve", "fig7_decode", "fig8_paged",
-           "fig9_load", "fig10_chaos", "roofline_sweep")
+           "fig9_load", "fig10_chaos", "fig11_overlap", "roofline_sweep")
 
 
 def main() -> None:

@@ -1,25 +1,47 @@
 #!/usr/bin/env bash
-# Serving launch environment. Source before any repro.launch entrypoint:
+# Serving launch environment — config-driven runtime policy. Source
+# before any repro.launch entrypoint:
 #
 #   source scripts/launch_env.sh [n_host_devices]
 #
-# Two things are exported, both safe no-ops when unavailable:
+# Policy knobs (all optional, all safe no-ops when unset/unavailable):
+#
+#   REPRO_HOST_DEVICES=N        faked host device count (arg 1 wins)
+#   REPRO_TCMALLOC_REPORT=N     TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD
+#                               bytes (default 1 GiB: page pools are
+#                               tens of MB per replica — mute the log)
+#   REPRO_STEP_MARKER=0|1|2     --xla_step_marker_location placement
+#                               (0=entry, 1=per-step markers around the
+#                               outer loop, 2=none); profile-friendly
+#                               step boundaries for the decode rounds
+#   REPRO_DTYPE_POLICY=bf16|tf32|f32
+#                               default matmul precision, consumed
+#                               in-process by repro.launch.serve
+#                               (apply_runtime_policy) — exported here
+#                               so shell and driver share one config
+#
+# What gets exported:
 #
 # 1. tcmalloc preload — the serve engines churn large host buffers
 #    (prompt staging, per-round block tables, result assembly); glibc
 #    malloc's arena locking shows up in the dispatch loop under replica
 #    concurrency. If a tcmalloc shared object exists on this box it is
 #    LD_PRELOADed; otherwise nothing changes. The large-alloc report
-#    threshold is raised so page-pool-sized mmaps don't spam stderr.
+#    threshold honors REPRO_TCMALLOC_REPORT.
 #
-# 2. XLA host device count — the sharded serve tests and fig9_load run
-#    TP over *faked* host devices
-#    (--xla_force_host_platform_device_count). The count comes from the
-#    first argument, then $REPRO_HOST_DEVICES, then defaults to 1 (the
-#    bit-exact single-device path). Set before the first jax import —
-#    jax pins the device count at init. An existing XLA_FLAGS value is
-#    kept and extended, never clobbered; if it already forces a device
-#    count, it wins.
+# 2. XLA flags — host device count for the sharded serve tests and
+#    fig9_load (--xla_force_host_platform_device_count; first argument,
+#    then $REPRO_HOST_DEVICES, then 1 — the bit-exact single-device
+#    path), plus the step-marker placement when REPRO_STEP_MARKER is
+#    set. Set before the first jax import — jax pins XLA flags at
+#    backend init. An existing XLA_FLAGS value is kept and extended,
+#    never clobbered; flags it already carries win.
+#
+# 3. The dtype-policy env block — REPRO_DTYPE_POLICY is validated and
+#    re-exported for repro.launch.serve to apply via
+#    jax.config.update("jax_default_matmul_precision", ...). XLA flags
+#    must be set pre-import, but matmul precision is a jax config —
+#    the python side owns the actual update.
 
 _repro_ndev="${1:-${REPRO_HOST_DEVICES:-1}}"
 
@@ -33,8 +55,7 @@ for _repro_lib in \
             *":${_repro_lib}:"*) ;;
             *) export LD_PRELOAD="${_repro_lib}${LD_PRELOAD:+:${LD_PRELOAD}}" ;;
         esac
-        # page pools are tens of MB per replica: mute the per-alloc log
-        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=1073741824
+        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${REPRO_TCMALLOC_REPORT:-1073741824}"
         break
     fi
 done
@@ -47,3 +68,29 @@ case " ${XLA_FLAGS:-} " in
         ;;
 esac
 unset _repro_ndev
+
+# step-marker placement: profile tools cut the trace at step boundaries;
+# placement 1 wraps each outer (decode-round) step. Only appended when
+# requested and not already present — existing flags win.
+if [ -n "${REPRO_STEP_MARKER:-}" ]; then
+    case " ${XLA_FLAGS:-} " in
+        *xla_step_marker_location*) ;;
+        *)
+            export XLA_FLAGS="${XLA_FLAGS:+${XLA_FLAGS} }--xla_step_marker_location=${REPRO_STEP_MARKER}"
+            ;;
+    esac
+fi
+
+# dtype policy: validate here (fail fast at source time, not mid-serve)
+# and re-export; repro.launch.serve.apply_runtime_policy applies it.
+if [ -n "${REPRO_DTYPE_POLICY:-}" ]; then
+    case "${REPRO_DTYPE_POLICY}" in
+        bf16|tf32|f32)
+            export REPRO_DTYPE_POLICY
+            ;;
+        *)
+            echo "launch_env.sh: unknown REPRO_DTYPE_POLICY='${REPRO_DTYPE_POLICY}' (expected bf16|tf32|f32)" >&2
+            return 1 2>/dev/null || exit 1
+            ;;
+    esac
+fi

@@ -66,7 +66,30 @@ class Checkpointer:
         self._error: BaseException | None = None
 
     # -- save ----------------------------------------------------------------
-    def save(self, step: int, tree, *, block: bool = False):
+    def busy(self) -> bool:
+        """True while a background save is still writing.
+
+        Lets latency-sensitive callers (the serve engines' ``snapshot``)
+        decide *before* calling ``save`` whether they would stall on
+        the previous write.
+        """
+        return self._thread is not None and self._thread.is_alive()
+
+    def save(self, step: int, tree, *, block: bool = False,
+             skip_if_busy: bool = False) -> bool:
+        """Snapshot ``tree`` at ``step``; returns True iff a save started.
+
+        Default behavior is double-buffered: at most one write in
+        flight, a new save first waits for the previous.
+        ``skip_if_busy=True`` turns that wait into a skip — the serving
+        path snapshots opportunistically and must never stall a decode
+        round on disk; a skipped save returns False and the caller
+        simply tries again at the next snapshot point. (A *finished*
+        background write is still joined either way, so write errors
+        surface here rather than vanishing.)
+        """
+        if skip_if_busy and self.busy():
+            return False
         self.wait()
         leaves, treedef = _flatten_with_paths(tree)
         host_leaves = [np.asarray(l) for l in leaves]   # device->host copy
@@ -76,6 +99,7 @@ class Checkpointer:
         self._thread.start()
         if block:
             self.wait()
+        return True
 
     def _guarded_write(self, step: int, leaves, treedef_str: str):
         """Run ``_write`` capturing any failure for the next ``wait()``."""

@@ -189,6 +189,35 @@ def registered_models() -> tuple:
     return tuple(MACHINES.values())
 
 
+def machine_fingerprint(machine) -> str:
+    """Content hash of one machine file (name or model).
+
+    Stable across processes for identically-built models: the hash
+    covers the full dataclass repr — ports, µ-op table, WA mode,
+    memory ladder, core count. Two registrations of the *same name*
+    with different specs (ubench recalibration, test re-registration)
+    therefore fingerprint differently, which is what lets plan caches
+    and the persisted plan DB (repro.serve.plandb) key on machine
+    *content* instead of machine *names*.
+    """
+    import hashlib
+    m = get_machine(machine)
+    return hashlib.sha256(repr(m).encode()).hexdigest()[:16]
+
+
+def registry_fingerprint() -> tuple:
+    """(name, content-hash) pairs of the whole registry, in order.
+
+    The plan memo (repro.serve.planner) and the tile autotuner
+    (repro.kernels.tuning) key on this instead of the bare name tuple:
+    re-registering a machine under an existing name (``replace=True``)
+    changes the fingerprint, so a plan priced against the old spec can
+    never be served after a recalibration.
+    """
+    return tuple((name, machine_fingerprint(m))
+                 for name, m in MACHINES.items())
+
+
 # --- TPU machine files ------------------------------------------------------
 
 def _tpu_model(chip: ChipSpec, mxu_lat: float = 192.0) -> MachineModel:

@@ -40,11 +40,58 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import lru_cache
 
 from repro.core import memtier
-from repro.core.machine import MACHINES, get_machine
+from repro.core.machine import MACHINES, get_machine, machine_fingerprint
 from repro.utils.hw import dtype_bytes
+
+#: manual tile-plan memo. Keyed on the machine's *content* fingerprint,
+#: not its name: an lru_cache keyed on the name would keep serving the
+#: old machine's tiles after a ``register(replace=True)`` with different
+#: parameters — the exact staleness bug the plan-DB work audits away.
+_TILE_MEMO: dict = {}
+#: how tile requests were satisfied (mirrors planner.plan_stats)
+_TILE_STATS = {"online": 0, "memo_hits": 0, "db_hits": 0}
+
+
+def tile_stats() -> dict:
+    """Counters of how tile plans were served since the last reset."""
+    return dict(_TILE_STATS)
+
+
+def reset_tile_stats() -> None:
+    """Zero the tile-plan counters (tests and benchmarks)."""
+    for k in _TILE_STATS:
+        _TILE_STATS[k] = 0
+
+
+def _memoized_tiles(kind: str, machine: str, kwargs: dict, compute):
+    """Memo -> plan-DB -> online resolution for one tile request.
+
+    The memo key folds ``machine_fingerprint`` so re-registered
+    machines with changed parameters miss cleanly; an installed plan
+    database (repro.serve.plandb) is consulted before computing, and a
+    DB hit is memoized so repeat requests stay O(1) dict probes.
+    """
+    m = get_machine(machine)
+    key = (kind, m.name, machine_fingerprint(machine),
+           tuple(sorted(kwargs.items())))
+    hit = _TILE_MEMO.get(key)
+    if hit is not None:
+        _TILE_STATS["memo_hits"] += 1
+        return hit
+    from repro.serve import plandb
+    db = plandb.installed()
+    if db is not None:
+        plan = db.lookup_tiles(kind, m.name, kwargs)
+        if plan is not None:
+            _TILE_STATS["db_hits"] += 1
+            _TILE_MEMO[key] = plan
+            return plan
+    _TILE_STATS["online"] += 1
+    plan = compute()
+    _TILE_MEMO[key] = plan
+    return plan
 
 #: candidate block sizes, kernel-friendly powers of two, largest first
 #: so that cost ties keep the larger (launch-amortizing) tile
@@ -141,7 +188,6 @@ def _overlap_ok(tiers, home) -> bool:
     return home is tiers[0] or home.shared_bw == 0
 
 
-@lru_cache(maxsize=512)
 def flash_tiles(machine: str, *, s: int, dh: int, h: int, hkv: int,
                 dtype: str = "bf16",
                 backend: str | None = None) -> TilePlan:
@@ -150,11 +196,23 @@ def flash_tiles(machine: str, *, s: int, dh: int, h: int, hkv: int,
     Prices the causal kernel at sequence length ``s`` per candidate:
     stream / resident / compute terms composed by the overlap rule
     (module docstring) over the causal half-grid. ``machine`` is a
-    registered name — plans are memoized on it. ``backend`` routes the
-    compute term through a scheduling backend (``tp_bound`` reproduces
-    the default closed form; ``mca_sched`` opts into simulator
-    pessimism); None keeps the historical arithmetic.
+    registered name — plans are memoized on its content fingerprint
+    and resolved through an installed plan database first
+    (:func:`_memoized_tiles`). ``backend`` routes the compute term
+    through a scheduling backend (``tp_bound`` reproduces the default
+    closed form; ``mca_sched`` opts into simulator pessimism); None
+    keeps the historical arithmetic.
     """
+    kwargs = dict(s=s, dh=dh, h=h, hkv=hkv, dtype=dtype, backend=backend)
+    return _memoized_tiles(
+        "flash", machine, kwargs,
+        lambda: _flash_tiles_online(machine, s=s, dh=dh, h=h, hkv=hkv,
+                                    dtype=dtype, backend=backend))
+
+
+def _flash_tiles_online(machine: str, *, s: int, dh: int, h: int,
+                        hkv: int, dtype: str,
+                        backend: str | None) -> TilePlan:
     m = get_machine(machine)
     tiers = memtier.tiers_of(m)
     backing = tiers[-1]
@@ -192,7 +250,6 @@ def flash_tiles(machine: str, *, s: int, dh: int, h: int, hkv: int,
             m.name, ws_bytes=s * 2.0 * dh * eb * hkv))
 
 
-@lru_cache(maxsize=512)
 def decode_tiles(machine: str, *, skv: int, dh: int, h: int, hkv: int,
                  batch: int = 1, dtype: str = "bf16",
                  backend: str | None = None) -> TilePlan:
@@ -203,9 +260,21 @@ def decode_tiles(machine: str, *, skv: int, dh: int, h: int, hkv: int,
     trades per-block bookkeeping (favors big ``bk``) against score-row
     residency (favors small ``bk``) while ``n_splits`` buys concurrent
     cores against the shared backing-tier ceiling at the price of one
-    cross-split combine pass per split. ``backend`` as in
-    :func:`flash_tiles`.
+    cross-split combine pass per split. Memoized/DB-resolved and
+    ``backend``-routed as in :func:`flash_tiles`.
     """
+    kwargs = dict(skv=skv, dh=dh, h=h, hkv=hkv, batch=batch, dtype=dtype,
+                  backend=backend)
+    return _memoized_tiles(
+        "decode", machine, kwargs,
+        lambda: _decode_tiles_online(machine, skv=skv, dh=dh, h=h,
+                                     hkv=hkv, batch=batch, dtype=dtype,
+                                     backend=backend))
+
+
+def _decode_tiles_online(machine: str, *, skv: int, dh: int, h: int,
+                         hkv: int, batch: int, dtype: str,
+                         backend: str | None) -> TilePlan:
     m = get_machine(machine)
     tiers = memtier.tiers_of(m)
     backing = tiers[-1]
@@ -273,6 +342,10 @@ def fit_block(block: int, s: int) -> int:
 
 
 def clear_cache() -> None:
-    """Drop memoized plans (tests re-register machines under one name)."""
-    flash_tiles.cache_clear()
-    decode_tiles.cache_clear()
+    """Drop memoized tile plans (tests re-register machines).
+
+    Content-fingerprinted keys already miss when a machine's
+    *parameters* change; clearing reclaims memory and forces the next
+    request back through an installed plan DB.
+    """
+    _TILE_MEMO.clear()

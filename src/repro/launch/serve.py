@@ -13,6 +13,7 @@ instead of one per token.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -21,13 +22,55 @@ from repro.configs import get_config, get_smoke_config
 from repro.models import model as M
 from repro.serve import Request, ServeEngine
 
+#: REPRO_DTYPE_POLICY values -> jax default matmul precision. Set by
+#: scripts/launch_env.sh (the config-driven runtime policy block);
+#: consumed here so the driver and the env script agree on one table.
+_DTYPE_POLICIES = {"bf16": "bfloat16", "tf32": "tensorfloat32",
+                   "f32": "highest"}
+
+
+def apply_runtime_policy(env: dict | None = None) -> dict:
+    """Apply the launch-env runtime policy this process can still honor.
+
+    ``scripts/launch_env.sh`` exports three kinds of policy knobs:
+    process-start ones (tcmalloc LD_PRELOAD, XLA step-marker flags,
+    TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD) that only the shell can
+    apply, and in-process ones this hook picks up — today the dtype
+    policy: ``REPRO_DTYPE_POLICY`` in {bf16, tf32, f32} maps to jax's
+    default matmul precision. Returns the subset of policy that was
+    applied, for the launch banner (an unknown policy value raises —
+    a typo'd policy must not silently serve full-precision traffic).
+    """
+    env = os.environ if env is None else env
+    applied = {}
+    policy = env.get("REPRO_DTYPE_POLICY", "")
+    if policy:
+        prec = _DTYPE_POLICIES.get(policy)
+        if prec is None:
+            raise ValueError(
+                f"REPRO_DTYPE_POLICY={policy!r}: expected one of "
+                f"{sorted(_DTYPE_POLICIES)}")
+        jax.config.update("jax_default_matmul_precision", prec)
+        applied["dtype_policy"] = f"{policy} -> {prec}"
+    marker = env.get("REPRO_STEP_MARKER", "")
+    if marker and "--xla_step_marker_location" not in \
+            env.get("XLA_FLAGS", ""):
+        # XLA flags are read at backend init; by the time python code
+        # runs it is too late to set them. The env script is the right
+        # place — flag the miss loudly instead of silently ignoring it.
+        applied["step_marker"] = (
+            f"REPRO_STEP_MARKER={marker} set but XLA_FLAGS lacks "
+            f"--xla_step_marker_location (source scripts/launch_env.sh)")
+    return applied
+
 
 def generate(cfg, params, prompt_tokens, gen_len: int, *,
              temperature: float = 0.0, seed: int = 0,
              chunk: int | None = None, machine: str | None = None,
              mesh=None, replicas: int = 1,
              engine_out: list | None = None,
-             fault_tolerant: bool = False):
+             fault_tolerant: bool = False,
+             pipeline: bool | int = 0):
     """Greedy/temperature batched generation. prompt_tokens: (B, S).
 
     One slot per prompt; the whole batch is admitted at once (a single
@@ -41,7 +84,9 @@ def generate(cfg, params, prompt_tokens, gen_len: int, *,
     :class:`repro.serve.FaultTolerantRouter` (replica health tracking,
     request rescue, priced degradation — same results on a healthy
     fleet). Pass a list as ``engine_out`` to receive the engine(s)
-    (dispatch counters) for inspection.
+    (dispatch counters) for inspection. ``pipeline`` enables the
+    engines' double-buffered decode dispatch (token streams stay
+    byte-identical to the serial rounds).
     """
     import numpy as np
 
@@ -56,7 +101,8 @@ def generate(cfg, params, prompt_tokens, gen_len: int, *,
     engines = [ServeEngine(cfg, params, max_slots=slots,
                            max_len=s + gen_len,
                            chunk=min(chunk or 1, max(1, gen_len - 1)),
-                           temperature=temperature, seed=seed, mesh=mesh)
+                           temperature=temperature, seed=seed, mesh=mesh,
+                           pipeline=pipeline)
                for _ in range(replicas)]
     prompts = np.asarray(prompt_tokens)
     reqs = [Request(rid=str(i), prompt=tuple(int(t) for t in prompts[i]),
@@ -96,8 +142,26 @@ def main(argv=None):
                     help="route through the health-tracking "
                          "FaultTolerantRouter (replica quarantine/eject, "
                          "request rescue, priced degradation)")
+    ap.add_argument("--pipeline", type=int, default=0,
+                    help="in-flight decode rounds per engine (0 = serial "
+                         "dispatch; 2 = double-buffered). Token streams "
+                         "are byte-identical either way")
+    ap.add_argument("--plan-db", default="",
+                    help="path to a repro.serve.plandb JSON database; "
+                         "installed before planning so admission plans "
+                         "are O(1) DB hits (missing keys fall back to "
+                         "online planning, bit-identically)")
     args = ap.parse_args(argv)
 
+    policy = apply_runtime_policy()
+    for k, v in sorted(policy.items()):
+        print(f"runtime policy: {k}: {v}")
+    if args.plan_db:
+        from repro.serve import plandb
+        db = plandb.PlanDB.load(args.plan_db)
+        plandb.install(db)
+        print(f"plan db: {args.plan_db} ({len(db.chunks)} chunk plans, "
+              f"{len(db.tiles)} tile plans)")
     from repro.launch.mesh import make_serve_mesh
     mesh = make_serve_mesh(args.mesh)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -114,16 +178,19 @@ def main(argv=None):
                     temperature=args.temperature, seed=args.seed,
                     chunk=args.chunk or None, mesh=mesh,
                     replicas=args.replicas, engine_out=eng_out,
-                    fault_tolerant=args.fault_tolerant)
+                    fault_tolerant=args.fault_tolerant,
+                    pipeline=args.pipeline)
     dt = time.time() - t0
     eng = eng_out[0]
     shard = f" tp={eng.tp}" if mesh is not None else ""
     repl = f" x{len(eng_out)} replicas" if len(eng_out) > 1 else ""
+    gap = eng.stats()["mean_dispatch_gap_s"]
+    pipe = f" pipeline={eng.pipeline}" if eng.pipeline else ""
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s) — "
           f"{eng.decode_dispatches} decode dispatches "
           f"(chunk={eng.chunk}) + {eng.prefill_dispatches} prefill"
-          f"{shard}{repl}")
+          f"{shard}{repl}{pipe} | mean dispatch gap {1e3 * gap:.2f}ms")
     print("sample:", toks[0, :16].tolist())
     return toks
 

@@ -35,6 +35,15 @@ single-device path. ``ReplicaRouter`` (``repro.serve.router``) scales
 *traffic* instead: N replicas behind a round-robin / least-loaded
 admission controller with per-replica queues and backpressure.
 
+The overlapped runtime threads through all of it: ``pipeline=N`` on
+either engine double-buffers the decode dispatch (round N+1 enqueued
+while round N executes, token streams byte-identical to serial;
+``stats()['mean_dispatch_gap_s']`` is the measured host gap),
+``repro.serve.staging`` prefetches queued prompts to the device so
+admission skips the H2D copy, and ``repro.serve.plandb`` persists an
+offline planner sweep (both backends, chunk x tile x tp x flavor) so
+admission planning at startup is an O(1) bit-identical DB hit.
+
 The fault-tolerance layer rides on top: ``repro.serve.faults`` is the
 seeded deterministic fault injector (``FaultyEngine`` wraps either
 engine and injects step/admission failures on a schedule), and
@@ -57,10 +66,15 @@ from repro.serve.kv_traffic import (collective_traffic, cow_fork_traffic,
                                     page_admission_traffic,
                                     page_gather_traffic, rescue_traffic)
 from repro.serve.pages import PagePool, PoolExhausted, paged_cache_pspecs
+from repro.serve.plandb import (PlanDB, backend_disagreements,
+                                plandb_install, plandb_installed,
+                                sweep_plans)
 from repro.serve.planner import (ChunkPlan, decode_step_hlo,
                                  kv_read_seconds, plan_chunk_size,
-                                 planned_round_seconds)
+                                 plan_stats, planned_round_seconds,
+                                 reset_plan_stats)
 from repro.serve.router import QueueFull, ReplicaRouter
+from repro.serve.staging import PromptStager
 
 __all__ = [
     "ChunkPlan",
@@ -71,13 +85,16 @@ __all__ = [
     "NoHealthyReplica",
     "PagePool",
     "PagedServeEngine",
+    "PlanDB",
     "PoolExhausted",
+    "PromptStager",
     "QueueFull",
     "ReplicaHealth",
     "ReplicaRouter",
     "Request",
     "ServeEngine",
     "TransientFault",
+    "backend_disagreements",
     "chaos_schedule",
     "collective_traffic",
     "cow_fork_traffic",
@@ -91,8 +108,13 @@ __all__ = [
     "page_gather_traffic",
     "paged_cache_pspecs",
     "plan_chunk_size",
+    "plan_stats",
+    "plandb_install",
+    "plandb_installed",
     "planned_round_seconds",
     "poison_slot",
     "priced_degradation",
     "rescue_traffic",
+    "reset_plan_stats",
+    "sweep_plans",
 ]

@@ -33,6 +33,7 @@ shared-prefix determinism also assumes dense FFNs).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -46,6 +47,7 @@ from repro.serve import pages as pages_lib
 from repro.serve.decode import make_chunked_decode_step
 from repro.serve.planner import plan_chunk_size
 from repro.serve.slots import make_insert_step
+from repro.serve.staging import PromptStager
 from repro.train import serve as serve_lib
 from repro.utils.sharding import (SERVE_ENGINE_RULES, mesh_axis_sizes,
                                   named_sharding, tp_degree, use_mesh_rules)
@@ -82,6 +84,24 @@ class _Slot:
     out: list                     # tokens emitted so far
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unconsumed decode round (pipelined mode).
+
+    ``toks``/``ok`` are *device* arrays — touching them with
+    ``np.asarray`` is the readback the pipeline defers. ``entries``
+    snapshots which slot objects the round decoded and how many of its
+    tokens each one keeps (``take``); the identity of the ``_Slot``
+    reference is what lets a later consume skip rounds belonging to a
+    stream that was quarantined in an earlier buffered round.
+    """
+
+    toks: object                  # (B, chunk) device int32
+    ok: object | None             # (B,) device bool, or None (no guard)
+    entries: list                 # [(slot index, _Slot, take)]
+    chunk: int                    # chunk size this round was decoded at
+
+
 class ServeEngine:
     """Continuous-batching engine over ``max_slots`` preallocated KV slots.
 
@@ -109,11 +129,30 @@ class ServeEngine:
                  kv_len: int | None = None,
                  store_flavor: str = "auto",
                  mesh=None, rules: dict | None = None,
-                 nonfinite_guard: bool = True):
+                 nonfinite_guard: bool = True,
+                 pipeline: bool | int = 0,
+                 stage_depth: int = 8):
         assert cfg.embed_inputs, "serve engine needs a token-id model"
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_len = max_slots, max_len
         self.temperature = float(temperature)
+        # pipelined (double-buffered) dispatch: True -> depth 2, an int
+        # sets the in-flight round bound explicitly, 0/False keeps the
+        # historical serial step. See step()/sync() for the contract.
+        self.pipeline = 2 if pipeline is True else max(0, int(pipeline))
+        self._inflight: deque = deque()   # _InFlight records, oldest first
+        self._tok_dev = None              # device (B,1) next-token feed
+        # measured dispatch gap: host seconds between consecutive decode
+        # dispatch *enqueues* (readback + bookkeeping between rounds).
+        # Serial rounds block on token readback inside that window;
+        # pipelined rounds only do host bookkeeping there — the delta is
+        # exactly what fig11 measures.
+        self.dispatch_gap_s = 0.0
+        self.gap_rounds = 0
+        self._t_enqueued: float | None = None
+        # async H2D prompt staging (repro.serve.staging): stage() ahead
+        # of admission, admit() takes the already-resident array
+        self.stager = PromptStager(depth=stage_depth)
         # the non-finite guard makes every decode chunk also return a
         # per-slot isfinite flag (serve.decode guard=): a slot whose
         # logits went NaN/inf is quarantined — removed from its slot
@@ -200,6 +239,21 @@ class ServeEngine:
             return cache
         return jax.device_put(cache, _named(self.mesh, pspecs))
 
+    def _donate(self) -> tuple:
+        """Cache-donation argnums for the decode jit, mode-dependent.
+
+        Serial mode donates the cache: the KV update happens in place,
+        one buffer, minimal traffic. Pipelined mode must NOT donate —
+        donating a buffer that is still being produced by the previous
+        in-flight round forces the runtime to block the *enqueue* until
+        the producer completes (measured on this backend: a donated
+        chained dispatch serializes entirely), which would silently
+        turn the pipeline back into the serial loop. Double-buffering
+        therefore pays the classic price: two cache buffers alive and a
+        copy-on-update round, in exchange for enqueues that never wait.
+        """
+        return () if self.pipeline else (1,)
+
     def _make_decode(self):
         """Jit the chunked decode step for the current ``self.chunk``."""
         return jax.jit(
@@ -208,7 +262,7 @@ class ServeEngine:
                 attn_impl=self.attn_impl, kv_len=self.kv_len,
                 store_flavor=self.store_flavor,
                 guard=self.nonfinite_guard)),
-            donate_argnums=(1,))
+            donate_argnums=self._donate())
 
     def set_chunk(self, chunk: int) -> None:
         """Re-plan the decode chunk size mid-flight (degraded mode).
@@ -255,20 +309,70 @@ class ServeEngine:
     def _pre_dispatch(self) -> None:
         """Host-side bookkeeping before a chunk (no-op for dense slots)."""
 
-    def _dispatch(self, sub):
-        """Issue one chunked decode over all slots; returns (B, chunk)."""
-        out = self._decode(
-            self.params, self.cache, jnp.asarray(self._tok),
-            jnp.asarray(self._pos), sub)
-        return self._unpack_dispatch(out)
+    def _mark_gap(self) -> None:
+        """Accumulate the host gap since the previous dispatch enqueue."""
+        now = time.perf_counter()
+        if self._t_enqueued is not None:
+            self.dispatch_gap_s += now - self._t_enqueued
+            self.gap_rounds += 1
 
-    def _unpack_dispatch(self, out):
-        """Split a decode result into tokens + cache (+ guard flags)."""
+    def _host_dev(self, arr):
+        """Ship one mutable host array to device for a dispatch.
+
+        ``jnp.asarray`` of an aligned numpy buffer may be *zero-copy*
+        on CPU, so the enqueued computation reads the live host memory.
+        Serial rounds are safe (the readback at the end of the step
+        completes the dispatch before any bookkeeping mutates
+        ``_pos``/``_tok``), but pipelined rounds mutate both right
+        after the enqueue while the round is still in flight — ship a
+        snapshot copy instead, or the eager position advance races the
+        device reads (observed as timing-dependent stream corruption).
+        """
+        return jnp.asarray(arr.copy() if self.pipeline else arr)
+
+    def _tok_input(self):
+        """Next-token feed for the coming dispatch.
+
+        Serial rounds (and the first pipelined round after a sync)
+        ship the host-side ``self._tok``; chained pipelined rounds
+        feed the previous round's last-token *device* slice directly,
+        so the dispatch never waits for a readback.
+        """
+        return self._tok_dev if self._tok_dev is not None \
+            else self._host_dev(self._tok)
+
+    def _decode_args(self):
+        """Positional args of one decode dispatch (before the PRNG key)."""
+        return (self.params, self.cache, self._tok_input(),
+                self._host_dev(self._pos))
+
+    def _dispatch_raw(self, sub):
+        """Enqueue one chunked decode; returns device (toks, ok|None).
+
+        Purely asynchronous: the result arrays are *futures* (jax async
+        dispatch) and nothing here blocks on device work. ``self.cache``
+        advances to the round's output cache immediately — later
+        dispatches, admissions, and page copies chain on it in enqueue
+        order. In pipelined mode the last-token slice becomes the next
+        round's device-side token feed.
+        """
+        self._mark_gap()
+        out = self._decode(*self._decode_args(), sub)
+        self._t_enqueued = time.perf_counter()
         if self.nonfinite_guard:
             toks, self.cache, _, ok = out
-            self._last_ok = np.asarray(ok)
         else:
             toks, self.cache, _ = out
+            ok = None
+        if self.pipeline:
+            self._tok_dev = toks[:, self.chunk - 1:self.chunk]
+        return toks, ok
+
+    def _dispatch(self, sub):
+        """Issue one chunked decode over all slots; returns (B, chunk)."""
+        toks, ok = self._dispatch_raw(sub)
+        if ok is not None:
+            self._last_ok = np.asarray(ok)
         return toks
 
     # -- admission ----------------------------------------------------------
@@ -308,8 +412,31 @@ class ServeEngine:
                 f"request {req.rid}: prompt ids must be in "
                 f"[0, {self.cfg.vocab_size})")
 
+    def stage(self, req: Request) -> bool:
+        """Prefetch one pending request's prompt to device (async H2D).
+
+        Called ahead of admission — by ``run()``'s look-ahead, the
+        router's ``submit()``, or a rescue replay — so that when a slot
+        frees the prompt tokens are already device-resident and
+        ``admit()`` skips the host→device copy. Purely an optimization:
+        bit-identical whether or not the prompt was staged. Sharded
+        engines decline (the jitted prefill shards its own host input);
+        returns True iff a new async copy was issued.
+        """
+        if self.mesh is not None:
+            return False
+        return self.stager.stage(req.rid, tuple(int(t) for t in req.prompt))
+
     def admit(self, req: Request, slot: int | None = None) -> int:
-        """Prefill one request and insert it into a free slot, in place."""
+        """Prefill one request and insert it into a free slot, in place.
+
+        Concurrent with any in-flight pipelined rounds: the prefill and
+        slot-insert enqueue *behind* the dispatched decodes, so the
+        in-flight writes to this slot's (now retired) stripe or pages
+        happen-before the insert in device order — the insert wins.
+        The device-side token feed is patched in place so the chained
+        dispatch picks up the admission's first token.
+        """
         if slot is None:
             free = self.free_slots()
             if not free:
@@ -319,13 +446,19 @@ class ServeEngine:
         prompt = np.asarray(req.prompt, np.int32)
         s = prompt.shape[0]
         self._check_request(req, s)
-        logits, one = self._prefill(self.params, {"tokens": prompt[None, :]})
+        prompt_t = tuple(int(t) for t in prompt)
+        tokens = prompt[None, :] if self.mesh is not None \
+            else self.stager.take(req.rid, prompt_t)
+        logits, one = self._prefill(self.params, {"tokens": tokens})
         self.prefill_dispatches += 1
         tok0 = int(self._sample_first(logits[:, -1])[0])
-        self._insert_prefilled(slot, one, tuple(int(t) for t in prompt))
+        self._insert_prefilled(slot, one, prompt_t)
         self.slots[slot] = _Slot(rid=req.rid, remaining=req.max_new_tokens - 1,
                                  out=[tok0])
         self._tok[slot, 0] = tok0
+        if self._tok_dev is not None:
+            # keep the chained device feed coherent with the host copy
+            self._tok_dev = self._tok_dev.at[slot, 0].set(tok0)
         self._pos[slot] = s
         return slot
 
@@ -374,6 +507,9 @@ class ServeEngine:
         request's pages go straight back to the pool (no zero-fill, no
         cache traffic at all) and the next admission may recycle them.
         """
+        if self._inflight:
+            self.sync()          # materialize the stream before returning it
+        self.stager.discard(rid)
         for i, st in enumerate(self.slots):
             if st is not None and st.rid == rid:
                 out = np.asarray(st.out, np.int32)
@@ -386,7 +522,18 @@ class ServeEngine:
         """One decode round: a single chunked dispatch over all slots.
 
         Returns the requests retired this round as (rid, tokens) pairs.
+        With ``pipeline`` enabled the dispatch is double-buffered —
+        round N+1 is enqueued while round N's tokens are still in
+        flight, and the host only blocks on readback when a stream
+        actually retires (or the in-flight bound is hit). Retirement
+        and admission timing are identical to the serial step, so token
+        streams are byte-for-byte the same in both modes.
         """
+        if self.pipeline:
+            return self._step_pipelined()
+        return self._step_serial()
+
+    def _step_serial(self) -> list:
         retired = []
         for i, st in enumerate(self.slots):
             if st is not None and st.remaining <= 0:   # 1-token budgets:
@@ -423,6 +570,127 @@ class ServeEngine:
                 self._release_slot(i)
         return retired
 
+    def _step_pipelined(self) -> list:
+        """Double-buffered decode round: enqueue now, read back later.
+
+        The host bookkeeping that *can* run without token values does
+        run eagerly — ``remaining`` is decremented and positions advance
+        at dispatch time (both are pure arithmetic), so the next round's
+        page allocation and retirement *decisions* never wait on the
+        device. Only two things force a sync: a stream finishing (its
+        tokens must be materialized to be returned) and the in-flight
+        bound (consume the oldest round — by then it has been computing
+        behind the newer dispatches, so the readback is nearly free).
+        Syncing at the retirement round keeps slot-free timing — and
+        therefore admission order and the PRNG split sequence —
+        identical to the serial step.
+        """
+        retired = []
+        for i, st in enumerate(self.slots):
+            if st is not None and st.remaining <= 0:   # 1-token budgets
+                self.sync()
+                st = self.slots[i]      # sync may have quarantined it
+                if st is not None and st.remaining <= 0:
+                    retired.append((st.rid, np.asarray(st.out, np.int32)))
+                    self._release_slot(i)
+        if all(s is None for s in self.slots):
+            self.sync()
+            return retired
+        self._pre_dispatch()
+        self._key, sub = jax.random.split(self._key)
+        toks, ok = self._dispatch_raw(sub)
+        self.decode_dispatches += 1
+        entries, will_retire = [], False
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            take = min(self.chunk, st.remaining)
+            entries.append((i, st, take))
+            st.remaining -= take
+            self._pos[i] += self.chunk
+            will_retire = will_retire or st.remaining <= 0
+        self._inflight.append(_InFlight(toks, ok, entries, self.chunk))
+        if will_retire:
+            self.sync()
+            for i, st in enumerate(self.slots):
+                if st is not None and st.remaining <= 0:
+                    retired.append((st.rid, np.asarray(st.out, np.int32)))
+                    self._release_slot(i)
+        else:
+            while len(self._inflight) > self.pipeline:
+                self._consume_oldest()
+        return retired
+
+    def _consume_oldest(self) -> None:
+        """Read back the oldest in-flight round and apply its bookkeeping.
+
+        This is the only place pipelined mode touches device results:
+        tokens land on each stream's ``out``, the host-side next-token
+        feed catches up, and guard trips quarantine exactly as the
+        serial step would have — with the one difference that rounds
+        dispatched *after* a poisoned one are skipped for that stream
+        (their token-0 self-feed output is garbage by construction).
+        """
+        rec = self._inflight.popleft()
+        toks = np.asarray(rec.toks)
+        oks = np.asarray(rec.ok) if rec.ok is not None else None
+        for i, st, take in rec.entries:
+            if self.slots[i] is not st:
+                continue            # stream quarantined in an earlier round
+            if oks is not None and not bool(oks[i]):
+                self._last_ok[i] = False
+                self.quarantined.append(
+                    (st.rid, np.asarray(st.out, np.int32)))
+                self._release_slot(i)
+                continue
+            st.out.extend(int(t) for t in toks[i, :take])
+            self._tok[i, 0] = toks[i, rec.chunk - 1]
+
+    def sync(self) -> None:
+        """Drain every in-flight round's deferred host bookkeeping.
+
+        After a sync the engine is exactly where the serial step would
+        be: every emitted token is host-resident, the next dispatch
+        rebuilds its token feed from ``self._tok``, and quarantine
+        lists are complete. Cheap when nothing is in flight.
+        """
+        while self._inflight:
+            self._consume_oldest()
+        self._tok_dev = None
+
+    def stats(self) -> dict:
+        """Dispatch counters and the measured dispatch gap.
+
+        ``mean_dispatch_gap_s`` is the average host time between
+        consecutive decode-dispatch enqueues — the serial step blocks
+        on token readback inside that window, the pipelined step does
+        not, and the delta is the overlap win fig11 gates on.
+        """
+        gap = self.dispatch_gap_s / self.gap_rounds if self.gap_rounds \
+            else 0.0
+        return {"decode_dispatches": self.decode_dispatches,
+                "prefill_dispatches": self.prefill_dispatches,
+                "pipeline": self.pipeline,
+                "in_flight": len(self._inflight),
+                "dispatch_gap_s": self.dispatch_gap_s,
+                "gap_rounds": self.gap_rounds,
+                "mean_dispatch_gap_s": gap,
+                "staging": self.stager.stats()}
+
+    def snapshot(self, checkpointer, step: int) -> bool:
+        """Snapshot the served params without stalling the stream.
+
+        Hands the param tree to the async checkpointer
+        (``repro.checkpoint``) with ``skip_if_busy=True``: if the
+        previous background write is still running the snapshot is
+        *skipped* (returns False) instead of blocking the decode loop
+        on disk. In-flight pipelined rounds are untouched — params are
+        never donated, so the device-to-host copy the checkpointer
+        takes does not synchronize the decode stream.
+        """
+        return checkpointer.save(step, {"params": self.params},
+                                 skip_if_busy=True)
+
     def run(self, requests: list) -> dict:
         """Serve a request list to completion: {rid: (n_tokens,) int32}."""
         pending = deque(requests)
@@ -440,6 +708,11 @@ class ServeEngine:
                             break
                         self.admit(pending.popleft(), slot)
             first = False
+            # look-ahead prompt staging: the next few pending prompts
+            # start their H2D copies now, overlapped with the decode
+            # rounds below (already-staged rids just refresh, no copy)
+            for r in list(pending)[:self.stager.depth]:
+                self.stage(r)
             for rid, toks in self.step():
                 results[rid] = toks
         return results
@@ -497,7 +770,7 @@ class PagedServeEngine(ServeEngine):
                 attn_impl=self.attn_impl, kv_len=self.kv_len,
                 store_flavor=self.store_flavor, paged=True,
                 guard=self.nonfinite_guard)),
-            donate_argnums=(1,))
+            donate_argnums=self._donate())
 
     def _build_state(self):
         cfg, ps = self.cfg, self.page_size
@@ -588,13 +861,14 @@ class PagedServeEngine(ServeEngine):
                                   if st is not None]]
         self.gather_pages += int((live >= 0).sum())
 
-    def _dispatch(self, sub):
+    def _decode_args(self):
+        # ``bt`` is a fresh temporary (np.where allocates), so it may
+        # zero-copy alias safely; ``_pos`` is live host state and needs
+        # the pipelined snapshot copy (see ``_host_dev``)
         bt = np.where(self.block_tables < 0, self._scratch,
                       self.block_tables).astype(np.int32)
-        out = self._decode(
-            self.params, self.cache, jnp.asarray(bt),
-            jnp.asarray(self._tok), jnp.asarray(self._pos), sub)
-        return self._unpack_dispatch(out)
+        return (self.params, self.cache, jnp.asarray(bt),
+                self._tok_input(), self._host_dev(self._pos))
 
     # -- paged-only surface -------------------------------------------------
     def fork(self, rid: str, new_rid: str,
@@ -606,6 +880,8 @@ class PagedServeEngine(ServeEngine):
         Divergent writes trigger per-page CoW at the next
         `_pre_dispatch`. Returns the clone's slot index.
         """
+        if self._inflight:
+            self.sync()      # clone from materialized host-side state
         src = next((i for i, st in enumerate(self.slots)
                     if st is not None and st.rid == rid), None)
         if src is None:

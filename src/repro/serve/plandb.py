@@ -1,0 +1,326 @@
+"""Persisted offline plan database for the serve path.
+
+Every cold engine construction used to pay the full online planning
+bill at admission time: lower the decode step to HLO, fan
+``portmodel.compare`` across the machine registry, and autotune the
+kernel tiles — hundreds of milliseconds of work whose answer depends
+only on (machine, model config, sharding), none of which change
+between serving runs. This module moves that work offline: ``sweep``
+prices the (chunk size x tile x n_splits x store flavor x tp) space
+with both the analytical ``tp_bound`` backend and the ``mca_sched``
+cycle simulator, persists the winners as versioned JSON, and an
+installed database turns ``plan_chunk_size`` / ``decode_tiles`` /
+``flash_tiles`` into O(1) dictionary hits at engine construction.
+
+Staleness is impossible by construction, not by discipline: every DB
+key folds content fingerprints of the model config (sha256 of the
+frozen dataclass repr) and of *every* registered machine
+(``core.machine.machine_fingerprint``). Re-registering a machine with
+different parameters, or editing a model config, changes the
+fingerprint, the key misses, and the planner falls back to online
+planning — bit-identically, since the DB stores exactly the object
+online planning would have produced (``dataclasses.asdict`` through
+JSON round-trips Python floats exactly).
+
+The two backends do not always agree on a winner — ``mca_sched``'s
+dispatch-width pessimism can push a machine to a smaller chunk or a
+different split count than the balanced-port bound. That is signal,
+not noise (the source paper's OSACA-vs-MCA comparison is exactly this
+disagreement at basic-block scale): ``backend_disagreements`` reports
+every swept point where the backends picked different winners, per
+machine, so the fig11 benchmark can surface where simulator pessimism
+changes the served configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+from repro.core.machine import (machine_fingerprint, registered_names,
+                                registry_fingerprint)
+from repro.serve.planner import ChunkPlan
+
+#: JSON format version; loading any other version is a hard error, not
+#: a silent partial read — a format change must never half-apply.
+PLANDB_VERSION = 1
+
+#: the process-wide installed database consulted by the planner/tuner
+_INSTALLED = None
+
+
+def config_fingerprint(cfg) -> str:
+    """Content fingerprint of a model config (frozen-dataclass repr).
+
+    Any field change — vocab size, head count, dtype policy — changes
+    the fingerprint and therefore every DB key derived from it.
+    """
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
+
+
+def _digest(material) -> str:
+    """Stable hash of hashable-ish key material (sorted-repr canonical)."""
+    return hashlib.sha256(repr(material).encode()).hexdigest()
+
+
+def _chunk_material(cfg, batch, max_len, *, machine, dispatch_overhead_s,
+                    overhead_frac, max_chunk, occupancy, backend,
+                    store_flavor, page_size, mesh_sizes, rules_fp, tp):
+    """Canonical key material for one chunk-plan entry.
+
+    Mirrors the planner's in-process memo key exactly, with the
+    object-identity parts (cfg, registry) replaced by content
+    fingerprints so the key survives serialization and process
+    boundaries.
+    """
+    return ("chunk", config_fingerprint(cfg), batch, max_len,
+            str(machine), float(dispatch_overhead_s),
+            float(overhead_frac), int(max_chunk), occupancy, backend,
+            store_flavor, page_size, tuple(sorted(mesh_sizes.items())),
+            tuple(rules_fp), int(tp), registry_fingerprint())
+
+
+def _tile_material(kind: str, machine: str, kwargs: dict):
+    """Canonical key material for one tile-plan entry (flash/decode)."""
+    return ("tile", kind, str(machine), machine_fingerprint(machine),
+            tuple(sorted(kwargs.items())))
+
+
+class PlanDB:
+    """A keyed store of finished serve plans, JSON-persistable.
+
+    ``chunks`` and ``tiles`` map key digests to entries of the form
+    ``{"plan": <asdict>, "context": <human-readable provenance>}``.
+    Lookups reconstruct the original frozen dataclass; a miss returns
+    None and costs one dict probe.
+    """
+
+    def __init__(self, chunks: dict | None = None,
+                 tiles: dict | None = None, meta: dict | None = None):
+        self.chunks = chunks if chunks is not None else {}
+        self.tiles = tiles if tiles is not None else {}
+        self.meta = meta if meta is not None else {}
+
+    # -- chunk plans --------------------------------------------------------
+    def lookup_chunk(self, cfg, batch, max_len, **key) -> ChunkPlan | None:
+        """The stored ChunkPlan for one planner key, or None."""
+        hit = self.chunks.get(
+            _digest(_chunk_material(cfg, batch, max_len, **key)))
+        if hit is None:
+            return None
+        return ChunkPlan(**hit["plan"])
+
+    def record_chunk(self, cfg, batch, max_len, *, plan: ChunkPlan,
+                     **key) -> None:
+        """Persist one finished chunk plan under its planner key."""
+        self.chunks[_digest(_chunk_material(cfg, batch, max_len, **key))] = {
+            "plan": dataclasses.asdict(plan),
+            "context": {"machine": str(key["machine"]),
+                        "backend": key["backend"], "tp": int(key["tp"]),
+                        "occupancy": key["occupancy"],
+                        "store_flavor": key["store_flavor"],
+                        "page_size": key["page_size"],
+                        "batch": batch, "max_len": max_len,
+                        "chunk": plan.chunk},
+        }
+
+    # -- tile plans ---------------------------------------------------------
+    def lookup_tiles(self, kind: str, machine: str, kwargs: dict):
+        """The stored TilePlan for one tuner key, or None."""
+        from repro.kernels.tuning import TilePlan
+        hit = self.tiles.get(_digest(_tile_material(kind, machine, kwargs)))
+        if hit is None:
+            return None
+        return TilePlan(**hit["plan"])
+
+    def record_tiles(self, kind: str, machine: str, kwargs: dict,
+                     plan) -> None:
+        """Persist one autotuned tile plan under its tuner key."""
+        self.tiles[_digest(_tile_material(kind, machine, kwargs))] = {
+            "plan": dataclasses.asdict(plan),
+            "context": dict(kwargs, kind=kind, machine=str(machine),
+                            bk=plan.bk, n_splits=plan.n_splits),
+        }
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path) -> None:
+        """Write the database as versioned JSON."""
+        doc = {"format": "repro-plandb", "version": PLANDB_VERSION,
+               "meta": self.meta, "chunks": self.chunks,
+               "tiles": self.tiles}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path) -> "PlanDB":
+        """Read a versioned JSON database; wrong versions are errors."""
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("format") != "repro-plandb":
+            raise ValueError(f"{path}: not a repro plan database")
+        if doc.get("version") != PLANDB_VERSION:
+            raise ValueError(
+                f"{path}: plan-DB version {doc.get('version')} != "
+                f"supported {PLANDB_VERSION} — re-run the sweep")
+        return cls(chunks=doc.get("chunks", {}),
+                   tiles=doc.get("tiles", {}), meta=doc.get("meta", {}))
+
+    def __len__(self) -> int:
+        return len(self.chunks) + len(self.tiles)
+
+
+def install(db: PlanDB | None) -> None:
+    """Make ``db`` the process-wide plan database (None uninstalls).
+
+    Clears the in-process plan/tile memos so the very next plan
+    request consults the new database instead of a memoized answer
+    computed under the old one.
+    """
+    global _INSTALLED
+    _INSTALLED = db
+    from repro.serve.planner import clear_plan_cache
+    clear_plan_cache()
+
+
+def installed() -> PlanDB | None:
+    """The currently installed plan database, if any."""
+    return _INSTALLED
+
+
+def sweep(cfg, *, batches=(8,), max_lens=(1024,),
+          machines=None, backends=("tp_bound", "mca_sched"),
+          tps=(1, 2), store_flavors=("auto",),
+          occupancies=(None,), page_sizes=(None,),
+          dispatch_overhead_s: float = 2e-4, overhead_frac: float = 0.1,
+          max_chunk: int = 32, decode_batch: int = 1,
+          dtype: str = "bf16") -> PlanDB:
+    """Price the serve plan space offline and return the database.
+
+    Sweeps chunk plans over (batch x max_len x machine x backend x tp
+    x store flavor x occupancy x page size) through the *online*
+    planner — any installed DB is temporarily uninstalled so the sweep
+    can never copy itself — and tile plans (flash prefill and split-KV
+    decode) over (machine x backend) at the shapes the config serves.
+    Both backends are swept so ``backend_disagreements`` has the full
+    table to compare.
+    """
+    from repro.kernels.tuning import decode_tiles, flash_tiles
+    from repro.serve.planner import plan_chunk_size
+    from repro.utils.sharding import SERVE_ENGINE_RULES, rules_fingerprint
+    if machines is None:
+        machines = registered_names()
+    db = PlanDB(meta={
+        "config": {"name": getattr(cfg, "name", "?"),
+                   "fingerprint": config_fingerprint(cfg)},
+        "registry": dict(registry_fingerprint()),
+    })
+    prev = _INSTALLED
+    install(None)
+    try:
+        for batch in batches:
+            for max_len in max_lens:
+                for machine in machines:
+                    for backend in backends:
+                        for tp in tps:
+                            for flavor in store_flavors:
+                                for occ in occupancies:
+                                    for ps in page_sizes:
+                                        _sweep_one(
+                                            db, cfg, batch, max_len,
+                                            machine=machine,
+                                            backend=backend, tp=tp,
+                                            store_flavor=flavor,
+                                            occupancy=occ, page_size=ps,
+                                            dispatch_overhead_s=(
+                                                dispatch_overhead_s),
+                                            overhead_frac=overhead_frac,
+                                            max_chunk=max_chunk,
+                                            plan_fn=plan_chunk_size,
+                                            rules=SERVE_ENGINE_RULES,
+                                            rules_fp=rules_fingerprint)
+        dh = cfg.head_dim_eff
+        for max_len in max_lens:
+            for machine in machines:
+                for backend in backends:
+                    fkw = dict(s=max_len, dh=dh, h=cfg.n_heads,
+                               hkv=cfg.n_kv_heads, dtype=dtype,
+                               backend=backend)
+                    db.record_tiles("flash", machine, fkw,
+                                    flash_tiles(machine, **fkw))
+                    dkw = dict(skv=max_len, dh=dh, h=cfg.n_heads,
+                               hkv=cfg.n_kv_heads, batch=decode_batch,
+                               dtype=dtype, backend=backend)
+                    db.record_tiles("decode", machine, dkw,
+                                    decode_tiles(machine, **dkw))
+    finally:
+        install(prev)
+    return db
+
+
+def _sweep_one(db, cfg, batch, max_len, *, machine, backend, tp,
+               store_flavor, occupancy, page_size, dispatch_overhead_s,
+               overhead_frac, max_chunk, plan_fn, rules, rules_fp):
+    """Plan one swept point online and record it under its DB key."""
+    plan = plan_fn(cfg, batch, max_len, machine=machine,
+                   dispatch_overhead_s=dispatch_overhead_s,
+                   overhead_frac=overhead_frac, max_chunk=max_chunk,
+                   occupancy=occupancy, backend=backend,
+                   store_flavor=store_flavor, page_size=page_size,
+                   tp=tp)
+    mesh_sizes = {"data": 1, "model": int(tp)} if tp > 1 else {}
+    db.record_chunk(cfg, batch, max_len, plan=plan, machine=machine,
+                    dispatch_overhead_s=dispatch_overhead_s,
+                    overhead_frac=overhead_frac, max_chunk=max_chunk,
+                    occupancy=occupancy, backend=plan.backend,
+                    store_flavor=store_flavor, page_size=page_size,
+                    mesh_sizes=mesh_sizes,
+                    rules_fp=rules_fp(rules if tp > 1 else None),
+                    tp=max(1, int(tp)))
+
+
+def backend_disagreements(db: PlanDB) -> list:
+    """Swept points where tp_bound and mca_sched picked different winners.
+
+    Groups every entry by its context minus the backend and reports
+    the groups whose winners differ — different chunk size for chunk
+    plans, different (bk, n_splits) for tile plans. Each row carries
+    both winners so the report reads as "on this machine, at this
+    point, simulator pessimism changes the served configuration".
+    """
+    rows = []
+    by_point: dict = {}
+    for ent in db.chunks.values():
+        ctx = dict(ent["context"])
+        backend = ctx.pop("backend")
+        chunk = ctx.pop("chunk")
+        by_point.setdefault(tuple(sorted(ctx.items())),
+                            {})[backend] = (chunk, ctx)
+    for point, winners in by_point.items():
+        picks = {b: w[0] for b, w in winners.items()}
+        if len(set(picks.values())) > 1:
+            ctx = next(iter(winners.values()))[1]
+            rows.append(dict(kind="chunk", picks=picks, **ctx))
+    by_point = {}
+    for ent in db.tiles.values():
+        ctx = dict(ent["context"])
+        backend = ctx.pop("backend")
+        win = (ctx.pop("bk"), ctx.pop("n_splits"))
+        by_point.setdefault(tuple(sorted(ctx.items())),
+                            {})[backend] = (win, ctx)
+    for point, winners in by_point.items():
+        picks = {b: w[0] for b, w in winners.items()}
+        if len(set(picks.values())) > 1:
+            ctx = next(iter(winners.values()))[1]
+            rows.append(dict(kind="tiles",
+                             picks={b: {"bk": w[0], "n_splits": w[1]}
+                                    for b, w in picks.items()}, **ctx))
+    return rows
+
+
+#: Package-namespace aliases: ``install``/``installed``/``sweep`` are
+#: the natural module-local names (``plandb.install(db)`` reads well)
+#: but too generic to re-export bare from ``repro.serve``.
+plandb_install = install
+plandb_installed = installed
+sweep_plans = sweep

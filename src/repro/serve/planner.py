@@ -36,13 +36,35 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import memtier, portmodel
-from repro.core.machine import get_machine, registered_names
+from repro.core.machine import (get_machine, registered_names,
+                                registry_fingerprint)
 from repro.models import model as M
 
 #: (cfg, batch, max_len, n_tokens, temperature) -> compiled HLO text
 _HLO_CACHE: dict = {}
-#: full plan key (incl. registered machine set) -> ChunkPlan
+#: full plan key (incl. registry content fingerprint) -> ChunkPlan
 _PLAN_CACHE: dict = {}
+#: planner invocation counters — how each plan request was satisfied.
+#: The plan-DB regression tests pin ``online_plans == 0`` on a DB hit.
+_PLAN_STATS = {"online_plans": 0, "memo_hits": 0, "db_hits": 0}
+
+
+def plan_stats() -> dict:
+    """Counters of how plan requests were served since the last reset.
+
+    ``online_plans`` counts full plans (HLO lowering + port-model
+    compare fan-out), ``memo_hits`` in-process memo returns, and
+    ``db_hits`` plans loaded from an installed plan database
+    (repro.serve.plandb). The plan-DB acceptance test pins that a DB
+    hit performs *zero* online planning.
+    """
+    return dict(_PLAN_STATS)
+
+
+def reset_plan_stats() -> None:
+    """Zero the planner invocation counters (tests and benchmarks)."""
+    for k in _PLAN_STATS:
+        _PLAN_STATS[k] = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,9 +100,23 @@ class ChunkPlan:
 
 
 def clear_plan_cache() -> None:
-    """Drop memoized HLO/plans (tests re-register machines)."""
+    """Drop every memoized planning artifact, together.
+
+    Clears the lowered-HLO memo, the finished-plan memo, AND the tile
+    autotuner's memo (repro.kernels.tuning) in one call — the three
+    caches answer the same "what should this machine run" question, so
+    tests that re-register machines (or swap a plan DB) must never see
+    one cache invalidated and another serving stale answers. Note the
+    memo keys also fold content fingerprints of the registered
+    machines, so a ``register(replace=True)`` with *different* machine
+    parameters misses the memo even without this call — clearing is
+    for reclaiming memory and forcing DB re-consultation, not the only
+    staleness defense.
+    """
     _HLO_CACHE.clear()
     _PLAN_CACHE.clear()
+    from repro.kernels import tuning
+    tuning.clear_cache()
 
 
 def decode_step_hlo(cfg: ModelConfig, batch: int, max_len: int,
@@ -189,7 +225,8 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
                     backend: str = "tp_bound",
                     store_flavor: str = "auto",
                     page_size: int | None = None,
-                    mesh=None, rules: dict | None = None) -> ChunkPlan:
+                    mesh=None, rules: dict | None = None,
+                    tp: int | None = None) -> ChunkPlan:
     """Pick the decode chunk size from the port model's per-step cost.
 
     chunk = ceil(dispatch_overhead / (overhead_frac * t_step)) clamped to
@@ -228,7 +265,19 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
     (``kv_traffic.collective_traffic``) is priced per machine and
     added to every per-machine cost. The memo key folds the mesh axis
     sizes, a rules fingerprint, and the TP degree, so a sharded plan
-    never serves an unsharded admission (and vice versa).
+    never serves an unsharded admission (and vice versa). Passing
+    ``tp`` *without* a mesh synthesizes the serve layout a real
+    ``(data=1, model=tp)`` mesh would present — the offline plan-DB
+    sweep (repro.serve.plandb) prices sharded plans on machines with
+    no such mesh available, under exactly the memo/DB key a real
+    sharded engine computes at admission.
+
+    Resolution order: in-process memo, then an installed plan database
+    (``repro.serve.plandb.install``), then a full online plan. The DB
+    key folds content fingerprints of the config and every registered
+    machine, so a stale DB entry can never outlive a model-config or
+    machine-parameter change — it simply misses and the planner falls
+    back online, bit-identically.
     """
     from repro.core.backends import get_backend
     from repro.utils.sharding import (SERVE_ENGINE_RULES, mesh_axis_sizes,
@@ -239,19 +288,44 @@ def plan_chunk_size(cfg: ModelConfig, batch: int, max_len: int, *,
         machine = "host_cpu" if "host_cpu" in names else names[0]
     if mesh is not None and rules is None:
         rules = SERVE_ENGINE_RULES
-    mesh_sizes = mesh_axis_sizes(mesh) if mesh is not None else {}
-    tp = tp_degree(mesh_sizes, rules) if mesh is not None else 1
+    if mesh is not None:
+        mesh_sizes = mesh_axis_sizes(mesh)
+        tp = tp_degree(mesh_sizes, rules)
+    elif tp is not None and int(tp) > 1:
+        # meshless sharded pricing: stand in for a (1, tp) serve mesh
+        mesh_sizes = {"data": 1, "model": int(tp)}
+        rules = SERVE_ENGINE_RULES if rules is None else rules
+        tp = tp_degree(mesh_sizes, rules)
+    else:
+        mesh_sizes, tp = {}, 1
     cache_key = None
     if hlo_text is None:
         cache_key = (cfg, batch, max_len, machine, dispatch_overhead_s,
                      overhead_frac, max_chunk, occupancy, backend,
                      store_flavor, page_size,
                      tuple(sorted(mesh_sizes.items())),
-                     rules_fingerprint(rules), tp, registered_names())
+                     rules_fingerprint(rules), tp, registry_fingerprint())
         hit = _PLAN_CACHE.get(cache_key)
         if hit is not None:
+            _PLAN_STATS["memo_hits"] += 1
             return hit
+        from repro.serve import plandb
+        db = plandb.installed()
+        if db is not None:
+            dbhit = db.lookup_chunk(
+                cfg, batch, max_len, machine=machine,
+                dispatch_overhead_s=dispatch_overhead_s,
+                overhead_frac=overhead_frac, max_chunk=max_chunk,
+                occupancy=occupancy, backend=backend,
+                store_flavor=store_flavor, page_size=page_size,
+                mesh_sizes=mesh_sizes,
+                rules_fp=rules_fingerprint(rules), tp=tp)
+            if dbhit is not None:
+                _PLAN_STATS["db_hits"] += 1
+                _PLAN_CACHE[cache_key] = dbhit
+                return dbhit
         hlo_text = decode_step_hlo(cfg, batch, max_len, n_tokens=1)
+    _PLAN_STATS["online_plans"] += 1
     reports = portmodel.compare(hlo_text, backends=backend)
     per_machine = {name: rep.tier_bound_seconds(get_machine(name))
                    for name, rep in reports.items()}

@@ -117,6 +117,13 @@ class ReplicaRouter:
         self.queues[i].append(req)
         self._owner[req.rid] = i
         self.submitted[i] += 1
+        # prefetch the prompt to the chosen replica's device while the
+        # request waits in queue (repro.serve.staging): admission then
+        # skips the H2D copy. Rescue replays resubmit through here, so
+        # rescued prompt+prefix streams are staged for free.
+        stage = getattr(self.replicas[i], "stage", None)
+        if stage is not None:
+            stage(req)
         return i
 
     def cancel(self, rid: str):
@@ -291,7 +298,11 @@ class ReplicaRouter:
         ``failed`` counts decode-round faults, ``retries`` the
         backoff-retried submits this replica refused, ``shed`` the
         requests dropped after the retry budget — all per replica, so
-        a sick replica is visible in one row.
+        a sick replica is visible in one row. ``pipeline`` and
+        ``mean_dispatch_gap_s`` surface each replica's overlapped-
+        runtime state: the in-flight round bound (0 = serial) and the
+        measured mean host gap between decode-dispatch enqueues — the
+        number fig11 gates on, readable live mid-serve.
         """
         return [{"replica": i,
                  "queued": len(self.queues[i]),
@@ -300,5 +311,9 @@ class ReplicaRouter:
                  "completed": self.completed[i],
                  "failed": self.failed[i],
                  "retries": self.retries[i],
-                 "shed": self.shed[i]}
+                 "shed": self.shed[i],
+                 "pipeline": getattr(eng, "pipeline", 0),
+                 "mean_dispatch_gap_s": (
+                     eng.stats().get("mean_dispatch_gap_s", 0.0)
+                     if hasattr(eng, "stats") else 0.0)}
                 for i, eng in enumerate(self.replicas)]

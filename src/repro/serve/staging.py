@@ -1,0 +1,106 @@
+"""Async host→device prompt staging for the serve path.
+
+Admission used to pay the host→device copy of every prompt inside the
+admission call itself: ``admit()`` built the ``(1, S)`` token array and
+handed it straight to the jitted prefill, so the H2D transfer sat on
+the admission critical path. At traffic scale that copy is pure,
+avoidable latency — the prompt is known the moment the request is
+queued, usually several decode rounds before a slot frees.
+
+:class:`PromptStager` is the small prefetch queue that closes that
+gap: ``stage()`` issues an *asynchronous* ``jax.device_put`` of the
+prompt tokens as soon as the request is enqueued (router submit, the
+engine's ``run()`` look-ahead, or a rescue replay), and ``take()``
+hands the already-resident device array to the prefill at admission
+time. jax's async dispatch means ``device_put`` returns immediately
+while the copy proceeds in the background, so by the time a slot
+frees the tokens are (typically) already on device and admission
+never blocks on the transfer.
+
+Correctness is unconditional: the staged array is built from exactly
+the same ``np.int32`` prompt tokens the unstaged path would have
+used, so prefill results are bit-identical whether or not a prompt
+was prefetched. ``take()`` verifies the staged entry against the
+prompt it is asked for and silently falls back to staging on the spot
+on any mismatch (a rid reused with a different prompt can never serve
+stale tokens). The queue is bounded (``depth``) so a long pending
+backlog cannot pin unbounded device memory; eviction is
+least-recently-staged.
+
+Rescued streams ride the same path for free: the fault-tolerant
+router replays an interrupted request as prompt+prefix through
+``submit()``, which stages the replay like any fresh arrival.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+
+class PromptStager:
+    """Bounded prefetch queue of device-resident prompt token arrays.
+
+    ``depth`` bounds how many prompts may be staged at once; staging
+    past the bound evicts the least-recently-staged entry (its device
+    buffer is dropped and the prompt simply re-stages at admission,
+    i.e. the historical synchronous path). ``device`` optionally pins
+    the ``device_put`` target; ``None`` uses jax's default placement —
+    the same placement a jitted prefill would commit the tokens to.
+    """
+
+    def __init__(self, depth: int = 8, device=None):
+        self.depth = max(1, int(depth))
+        self.device = device
+        self._staged: OrderedDict = OrderedDict()   # rid -> (prompt, dev)
+        self.staged = 0          # device_put prefetches issued
+        self.hits = 0            # admissions served from the queue
+        self.misses = 0          # admissions that had to stage inline
+
+    def _put(self, prompt: tuple):
+        arr = np.asarray(prompt, np.int32)[None, :]
+        if self.device is not None:
+            return jax.device_put(arr, self.device)
+        return jax.device_put(arr)
+
+    def stage(self, rid: str, prompt: tuple) -> bool:
+        """Prefetch one prompt; returns True if a new copy was issued.
+
+        A rid already staged with the same prompt is refreshed in
+        recency order but not re-copied. ``device_put`` is async — the
+        call returns as soon as the transfer is enqueued.
+        """
+        hit = self._staged.get(rid)
+        if hit is not None and hit[0] == tuple(prompt):
+            self._staged.move_to_end(rid)
+            return False
+        while len(self._staged) >= self.depth:
+            self._staged.popitem(last=False)
+        self._staged[rid] = (tuple(prompt), self._put(prompt))
+        self.staged += 1
+        return True
+
+    def take(self, rid: str, prompt: tuple):
+        """The staged ``(1, S)`` device array for one admission.
+
+        Pops the entry (a prompt is prefilled exactly once). A missing
+        or mismatched entry stages inline — bit-identical tokens, just
+        without the head start.
+        """
+        hit = self._staged.pop(rid, None)
+        if hit is not None and hit[0] == tuple(prompt):
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        return self._put(prompt)
+
+    def discard(self, rid: str) -> None:
+        """Drop one staged prompt (cancelled before admission)."""
+        self._staged.pop(rid, None)
+
+    def stats(self) -> dict:
+        """Prefetch counters: staged/hit/miss plus current queue depth."""
+        return {"staged": self.staged, "hits": self.hits,
+                "misses": self.misses, "queued": len(self._staged)}
